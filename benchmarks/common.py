@@ -1,0 +1,52 @@
+"""Benchmark helpers: CPU wall-time measurement + CSV emission.
+
+This container is CPU-only, so absolute times are NOT TPU numbers; each
+benchmark reports (a) measured µs/call for CPU-sized configs — structure and
+ratios are meaningful — and (b) 'derived' production numbers from analytical
+FLOP models + the dry-run roofline artifacts, which is how the paper's
+tables are reproduced quantitatively (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+ROWS: list[tuple] = []
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time of a jitted callable, seconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def load_dryrun(pattern: str) -> list[dict]:
+    out = []
+    if DRYRUN_DIR.exists():
+        for p in sorted(DRYRUN_DIR.glob(pattern)):
+            try:
+                rec = json.loads(p.read_text())
+                if rec.get("status") == "ok":
+                    out.append(rec)
+            except Exception:
+                pass
+    return out

@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks: Pallas(interpret) is a CORRECTNESS harness on
+CPU — the meaningful CPU numbers are chunked-vs-reference XLA paths; Pallas
+TPU timing comes from the roofline model (see EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.nn.attention import attention_chunked, attention_reference
+
+
+def attention_paths():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, h, kv, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
+    t_ref = timeit(jax.jit(lambda q, k, v: attention_reference(
+        q, k, v, causal=True)), q, k, v)
+    emit("kernels/attn_reference_512", t_ref * 1e6, "")
+    for chunk in (64, 128, 256):
+        t = timeit(jax.jit(lambda q, k, v: attention_chunked(
+            q, k, v, causal=True, chunk_size=chunk)), q, k, v)
+        emit(f"kernels/attn_chunked_{chunk}", t * 1e6,
+             f"vs_ref={t_ref / t - 1:+.1%}")
+
+
+def ssd_paths():
+    from repro.models.ssm import ssd_chunked, ssd_reference
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    t, h, p, n = 1024, 8, 32, 16
+    x = jax.random.normal(ks[0], (t, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (t, h)) * 0.5)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (t, n))
+    C = jax.random.normal(ks[4], (t, n))
+    D = jnp.ones((h,))
+    t_ref = timeit(jax.jit(lambda *a: ssd_reference(*a)), x, dt, A, B, C, D)
+    emit("kernels/ssd_recurrence_1k", t_ref * 1e6, "")
+    for chunk in (64, 256):
+        tt = timeit(jax.jit(lambda *a: ssd_chunked(*a, chunk=chunk)),
+                    x, dt, A, B, C, D)
+        emit(f"kernels/ssd_chunked_{chunk}", tt * 1e6,
+             f"speedup_vs_scan={t_ref / tt:.1f}x")
+
+
+ALL = [attention_paths, ssd_paths]

@@ -1,0 +1,27 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import paper_tables, kernel_bench
+    suites = paper_tables.ALL + kernel_bench.ALL
+    if len(sys.argv) > 1:
+        wanted = set(sys.argv[1:])
+        suites = [f for f in suites if f.__name__ in wanted]
+    failed = []
+    for fn in suites:
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failed.append((fn.__name__, e))
+            print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"{len(failed)} benchmark(s) failed: "
+                         f"{[n for n, _ in failed]}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,3 @@
+from repro.analysis.hlo import collective_bytes, parse_hlo_collectives  # noqa: F401
+from repro.analysis.roofline import (  # noqa: F401
+    HW, roofline_terms, model_flops)

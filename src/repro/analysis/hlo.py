@@ -1,0 +1,67 @@
+"""HLO text parsing: per-op collective byte accounting.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled (post-SPMD-partitioning) HLO text and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Scan caveat (DESIGN.md §7): ops inside ``while`` bodies execute trip-count
+times but appear once in the text.  The roofline harness therefore derives
+per-layer costs from reduced-depth *unrolled* lowerings and extrapolates;
+``parse_hlo_collectives`` itself reports static (once-counted) bytes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = bf16[16,4096]{1,0} all-reduce(%x), replica_groups=...
+#        ... = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-to-all(...)
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9_\[\],{}\s/#*]*\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_hlo_collectives(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind. '-done' ops are skipped so async
+    start/done pairs count once."""
+    out: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_text, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_text)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return sum(v["bytes"] for v in parse_hlo_collectives(hlo_text).values())

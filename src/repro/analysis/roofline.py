@@ -1,0 +1,120 @@
+"""Roofline terms from dry-run artifacts (TPU v5e constants per spec)."""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9           # B/s per chip
+    ici_bw: float = 50e9            # B/s per link
+
+
+def roofline_terms(*, total_flops: float, total_bytes: float,
+                   total_collective_bytes: float, chips: int,
+                   hw: HW = HW()) -> dict:
+    """All inputs are GLOBAL (across chips); terms are seconds."""
+    compute = total_flops / (chips * hw.peak_flops)
+    memory = total_bytes / (chips * hw.hbm_bw)
+    collective = total_collective_bytes / (chips * hw.ici_bw)
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms.update({
+        "dominant": dom.replace("_s", ""),
+        "step_lower_bound_s": bound,
+        "roofline_fraction": compute / bound if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int) -> float:
+    """MODEL_FLOPS: 6·N·D for dense training (2·N·D fwd-only for prefill,
+    2·N_active per token for decode); MoE uses active params."""
+    n_active = active_params(cfg)
+    tokens = seq_len * global_batch
+    if shape_kind == "train":
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * global_batch
+
+
+def active_params(cfg) -> float:
+    """Parameter count touched per token (MoE: top-k + shared only)."""
+    d, v = cfg.d_model, cfg.vocab
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family in ("dense", "vlm"):
+        att = d * (cfg.n_head + 2 * cfg.n_kv_head) * cfg.d_head + \
+            cfg.n_head * cfg.d_head * d
+        ffn = 3 * d * cfg.d_ff
+        n = cfg.n_layer * (att + ffn) + emb
+        if cfg.family == "vlm":
+            n += cfg.frontend_dim * d + d * d
+        return n
+    if cfg.family == "moe":
+        att = d * (cfg.n_head + 2 * cfg.n_kv_head) * cfg.d_head + \
+            cfg.n_head * cfg.d_head * d
+        routed = 3 * d * cfg.moe_d_ff * cfg.top_k
+        shared = 3 * d * (cfg.shared_d_ff or 0)
+        return cfg.n_layer * (att + routed + shared + d * cfg.n_experts) + emb
+    if cfg.family == "ssm":
+        di, n_s, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        blk = 2 * d * di + 2 * d * n_s + d * h + di * d
+        return cfg.n_layer * blk + emb
+    if cfg.family == "hybrid":
+        di, n_s, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+        blk = 2 * d * di + 2 * d * n_s + d * h + di * d
+        shared_blk = 2 * d * d + d * (cfg.n_head + 2 * cfg.n_kv_head) * \
+            cfg.d_head + cfg.n_head * cfg.d_head * d + 3 * d * cfg.d_ff
+        n_inv = (cfg.n_layer + cfg.shared_attn_every - 1) // cfg.shared_attn_every
+        # shared weights counted once for params but ACTIVE at each invocation
+        return cfg.n_layer * blk + n_inv * shared_blk + emb
+    if cfg.family == "audio":
+        att = 2 * (d * (cfg.n_head + 2 * cfg.n_kv_head) * cfg.d_head +
+                   cfg.n_head * cfg.d_head * d)   # self + cross
+        ffn = 2 * d * cfg.d_ff
+        dec = cfg.n_layer * (att + ffn)
+        enc = cfg.n_enc_layer * (att / 2 + ffn)
+        return dec + enc + v * d
+    raise ValueError(cfg.family)
+
+
+def af2_model_flops(cfg, n_recycle: float = 1.0) -> float:
+    """Analytical AF2 trunk FLOPs per protein per fwd pass (x3 for train).
+
+    Per-block terms (s=N_seq, r=N_res, m=c_m, z=c_z, per DESIGN.md §2):
+    MSA row attn ~ s·r²·(4m·h_c... ) — we count the dominant matmuls exactly.
+    """
+    def evo_block_flops(s, r, m, z, c_att, c_opm, c_mul, heads):
+        ha = heads * c_att
+        row = 2 * s * r * m * ha * 4 + 2 * s * r * r * ha * 2 + \
+            2 * r * r * z * heads
+        col = 2 * s * r * m * ha * 4 + 2 * r * s * s * ha * 2
+        mtrans = 2 * s * r * m * 4 * m * 2
+        opm = 2 * s * r * m * c_opm * 2 + 2 * r * r * s * c_opm * c_opm + \
+            2 * r * r * c_opm * c_opm * z
+        tri_mul = 2 * (2 * r * r * z * c_mul * 3 + 2 * r * r * r * c_mul +
+                       2 * r * r * c_mul * z)
+        tri_att = 2 * (2 * r * r * z * 4 * 32 * 4 + 2 * r * r * r * 4 * 32 * 2 +
+                       2 * r * r * z * 4)
+        ptrans = 2 * r * r * z * 4 * z * 2
+        return row + col + mtrans + opm + tri_mul + tri_att + ptrans
+
+    e = cfg.evoformer
+    main = cfg.n_evoformer * evo_block_flops(
+        cfg.n_seq, cfg.n_res, e.c_m, e.c_z, e.c_hidden_att, e.c_hidden_opm,
+        e.c_hidden_mul, e.n_head_msa)
+    x = cfg.extra
+    extra = cfg.n_extra_msa_blocks * evo_block_flops(
+        cfg.n_extra_seq, cfg.n_res, x.c_m, x.c_z, x.c_hidden_att,
+        x.c_hidden_opm, x.c_hidden_mul, x.n_head_msa)
+    st = cfg.structure
+    ipa = st.n_layer * (2 * cfg.n_res * st.c_s * st.n_head * st.c_hidden * 3 +
+                        2 * cfg.n_res * cfg.n_res * st.n_head *
+                        (st.c_hidden + st.c_z + st.n_qk_points * 3) +
+                        2 * cfg.n_res * st.c_s * st.c_s * 4)
+    return n_recycle * (main + extra + ipa)

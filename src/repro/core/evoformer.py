@@ -1,0 +1,316 @@
+"""Evoformer: MSA stack, pair stack, outer-product mean, and the three block
+variants of paper Fig. 1:
+
+* ``af2``      — serial (Fig 1a): MSA stack -> OPM -> pair stack.
+* ``multimer`` — OPM first (Fig 1b): OPM -> {MSA stack, pair stack}.
+* ``parallel`` — OPM last (Fig 1c, the paper's contribution): the MSA branch
+  and the pair branch are fully independent; all cross-communication happens
+  at the end of the block.  This is the property Branch Parallelism exploits.
+
+All functions operate on one protein: ``msa`` (s, r, c_m), ``pair`` (r, r, c_z).
+Batching is vmapped at the model level (paper: 1 protein per device).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import EvoformerConfig
+from repro.nn.attention import attention
+from repro.nn import layers as nn
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Dropout with shared axes (AF2 row-/column-wise dropout)
+# ---------------------------------------------------------------------------
+
+def shared_dropout(key, x, rate: float, *, shared_axis: int,
+                   deterministic: bool) -> jnp.ndarray:
+    if deterministic or rate == 0.0:
+        return x
+    shape = list(x.shape)
+    shape[shared_axis] = 1
+    keep = jax.random.bernoulli(key, 1.0 - rate, shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated attention (AF2 suppl. Algorithm 7) — used by MSA row/col + triangle att
+# ---------------------------------------------------------------------------
+
+def gated_attention_init(key, c_in: int, c_hidden: int, n_head: int,
+                         *, c_bias_in: Optional[int] = None) -> Params:
+    ks = nn.split_keys(key, 6)
+    hc = n_head * c_hidden
+    p = {
+        "ln": nn.layernorm_init(c_in),
+        "q": nn.dense_init(ks[0], c_in, hc, use_bias=False),
+        "k": nn.dense_init(ks[1], c_in, hc, use_bias=False),
+        "v": nn.dense_init(ks[2], c_in, hc, use_bias=False),
+        "gate": nn.dense_init(ks[3], c_in, hc, scale="zeros"),
+        "out": nn.dense_init(ks[4], hc, c_in, scale="zeros"),
+    }
+    # AF2 gating init: sigmoid(0 + 1) ~ open gate
+    p["gate"]["b"] = jnp.ones_like(p["gate"]["b"])
+    if c_bias_in is not None:
+        p["bias_ln"] = nn.layernorm_init(c_bias_in)
+        p["bias_proj"] = nn.dense_init(ks[5], c_bias_in, n_head, use_bias=False)
+    return p
+
+
+def project_attention_bias(p: Params, bias_input: jnp.ndarray) -> jnp.ndarray:
+    """(S, S', c_z) -> (h, S, S') attention bias (LN + headwise projection)."""
+    zb = nn.layernorm(p["bias_ln"], bias_input)
+    return jnp.moveaxis(nn.dense(p["bias_proj"], zb), -1, -3)
+
+
+def gated_attention(p: Params, x: jnp.ndarray, *, n_head: int, c_hidden: int,
+                    bias_input: Optional[jnp.ndarray] = None,
+                    bias: Optional[jnp.ndarray] = None,
+                    attention_impl: str = "chunked",
+                    attention_chunk: int = 256) -> jnp.ndarray:
+    """x: (..., L, S, c) — attention along S independently for each leading L.
+
+    ``bias_input`` projects a pair rep to the bias internally; alternatively a
+    precomputed ``bias`` (h, S, S) can be passed (DAP gathers it sharded).
+    """
+    h = nn.layernorm(p["ln"], x)
+    *lead, s, _ = x.shape
+    q = nn.dense(p["q"], h).reshape(*lead, s, n_head, c_hidden)
+    k = nn.dense(p["k"], h).reshape(*lead, s, n_head, c_hidden)
+    v = nn.dense(p["v"], h).reshape(*lead, s, n_head, c_hidden)
+    if bias_input is not None:
+        assert bias is None
+        bias = project_attention_bias(p, bias_input)       # (h, S, S)
+    o = attention(q, k, v, bias=bias, impl=attention_impl,
+                  chunk_size=attention_chunk)
+    g = jax.nn.sigmoid(nn.dense(p["gate"], h))
+    o = (g * o.reshape(*lead, s, n_head * c_hidden)).astype(x.dtype)
+    return nn.dense(p["out"], o)
+
+
+def global_attention_init(key, c_in: int, c_hidden: int, n_head: int) -> Params:
+    ks = nn.split_keys(key, 5)
+    hc = n_head * c_hidden
+    p = {
+        "ln": nn.layernorm_init(c_in),
+        "q": nn.dense_init(ks[0], c_in, hc, use_bias=False),
+        "k": nn.dense_init(ks[1], c_in, c_hidden, use_bias=False),
+        "v": nn.dense_init(ks[2], c_in, c_hidden, use_bias=False),
+        "gate": nn.dense_init(ks[3], c_in, hc, scale="zeros"),
+        "out": nn.dense_init(ks[4], hc, c_in, scale="zeros"),
+    }
+    p["gate"]["b"] = jnp.ones_like(p["gate"]["b"])
+    return p
+
+
+def global_attention(p: Params, x: jnp.ndarray, *, n_head: int,
+                     c_hidden: int) -> jnp.ndarray:
+    """Global (mean-query) attention along S: x (..., L, S, c) -> same.
+
+    Extra-MSA column attention (AF2 Algorithm 19): one averaged query per
+    column, shared K/V heads; O(L*S) not O(L*S^2).
+    """
+    h = nn.layernorm(p["ln"], x)
+    *lead, s, _ = x.shape
+    q_avg = jnp.mean(h, axis=-2)                                    # (..., c)
+    q = nn.dense(p["q"], q_avg).reshape(*lead, n_head, c_hidden)
+    q = q * (c_hidden ** -0.5)
+    k = nn.dense(p["k"], h)                                         # (..., S, c_h)
+    v = nn.dense(p["v"], h)
+    logits = jnp.einsum("...hc,...sc->...hs", q, k).astype(jnp.float32)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("...hs,...sc->...hc", w, v)                      # (..., h, c_h)
+    g = jax.nn.sigmoid(nn.dense(p["gate"], h))                      # (..., S, h*c)
+    o = g * o.reshape(*lead, 1, n_head * c_hidden)
+    return nn.dense(p["out"], o.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Transition (Algorithm 9/15)
+# ---------------------------------------------------------------------------
+
+def transition_init(key, c: int, factor: int) -> Params:
+    ks = nn.split_keys(key, 2)
+    return {
+        "ln": nn.layernorm_init(c),
+        "w1": nn.dense_init(ks[0], c, factor * c),
+        "w2": nn.dense_init(ks[1], factor * c, c, scale="zeros"),
+    }
+
+
+def transition(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    h = nn.layernorm(p["ln"], x)
+    return nn.dense(p["w2"], jax.nn.relu(nn.dense(p["w1"], h)))
+
+
+# ---------------------------------------------------------------------------
+# Outer product mean (Algorithm 10) — the cross-branch communication
+# ---------------------------------------------------------------------------
+
+def opm_init(key, c_m: int, c_hidden: int, c_z: int) -> Params:
+    ks = nn.split_keys(key, 3)
+    return {
+        "ln": nn.layernorm_init(c_m),
+        "a": nn.dense_init(ks[0], c_m, c_hidden),
+        "b": nn.dense_init(ks[1], c_m, c_hidden),
+        "out": nn.dense_init(ks[2], c_hidden * c_hidden, c_z, scale="zeros"),
+    }
+
+
+def outer_product_mean(p: Params, msa: jnp.ndarray) -> jnp.ndarray:
+    """msa (s, r, c_m) -> pair update (r, r, c_z)."""
+    h = nn.layernorm(p["ln"], msa)
+    a = nn.dense(p["a"], h)                                   # (s, r, c)
+    b = nn.dense(p["b"], h)
+    outer = jnp.einsum("sic,sjd->ijcd", a, b) / msa.shape[0]
+    outer = outer.reshape(*outer.shape[:2], -1)
+    return nn.dense(p["out"], outer.astype(msa.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Triangle multiplicative update (Algorithms 11/12)
+# ---------------------------------------------------------------------------
+
+def triangle_mult_init(key, c_z: int, c_hidden: int) -> Params:
+    ks = nn.split_keys(key, 6)
+    p = {
+        "ln_in": nn.layernorm_init(c_z),
+        "a": nn.dense_init(ks[0], c_z, c_hidden),
+        "a_gate": nn.dense_init(ks[1], c_z, c_hidden, scale="zeros"),
+        "b": nn.dense_init(ks[2], c_z, c_hidden),
+        "b_gate": nn.dense_init(ks[3], c_z, c_hidden, scale="zeros"),
+        "ln_out": nn.layernorm_init(c_hidden),
+        "out": nn.dense_init(ks[4], c_hidden, c_z, scale="zeros"),
+        "gate": nn.dense_init(ks[5], c_z, c_z, scale="zeros"),
+    }
+    for g in ("a_gate", "b_gate", "gate"):
+        p[g]["b"] = jnp.ones_like(p[g]["b"])
+    return p
+
+
+def triangle_mult(p: Params, z: jnp.ndarray, *, outgoing: bool) -> jnp.ndarray:
+    x = nn.layernorm(p["ln_in"], z)
+    a = jax.nn.sigmoid(nn.dense(p["a_gate"], x)) * nn.dense(p["a"], x)
+    b = jax.nn.sigmoid(nn.dense(p["b_gate"], x)) * nn.dense(p["b"], x)
+    if outgoing:
+        o = jnp.einsum("ikc,jkc->ijc", a, b)   # 'outgoing' edges
+    else:
+        o = jnp.einsum("kic,kjc->ijc", a, b)   # 'incoming' edges
+    o = nn.dense(p["out"], nn.layernorm(p["ln_out"], o.astype(z.dtype)))
+    g = jax.nn.sigmoid(nn.dense(p["gate"], x))
+    return (g * o).astype(z.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Evoformer block: branches + variants
+# ---------------------------------------------------------------------------
+
+def evoformer_block_init(key, cfg: EvoformerConfig) -> Params:
+    ks = nn.split_keys(key, 9)
+    col_attn = (global_attention_init(ks[1], cfg.c_m, cfg.c_hidden_att, cfg.n_head_msa)
+                if cfg.global_column_attn else
+                gated_attention_init(ks[1], cfg.c_m, cfg.c_hidden_att, cfg.n_head_msa))
+    return {
+        "row_attn": gated_attention_init(ks[0], cfg.c_m, cfg.c_hidden_att,
+                                         cfg.n_head_msa, c_bias_in=cfg.c_z),
+        "col_attn": col_attn,
+        "msa_trans": transition_init(ks[2], cfg.c_m, cfg.transition_factor),
+        "opm": opm_init(ks[3], cfg.c_m, cfg.c_hidden_opm, cfg.c_z),
+        "tri_mul_out": triangle_mult_init(ks[4], cfg.c_z, cfg.c_hidden_mul),
+        "tri_mul_in": triangle_mult_init(ks[5], cfg.c_z, cfg.c_hidden_mul),
+        "tri_att_start": gated_attention_init(ks[6], cfg.c_z, cfg.c_hidden_pair_att,
+                                              cfg.n_head_pair, c_bias_in=cfg.c_z),
+        "tri_att_end": gated_attention_init(ks[7], cfg.c_z, cfg.c_hidden_pair_att,
+                                            cfg.n_head_pair, c_bias_in=cfg.c_z),
+        "pair_trans": transition_init(ks[8], cfg.c_z, cfg.transition_factor),
+    }
+
+
+def msa_branch(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray,
+               z_bias_src: jnp.ndarray, *, rng=None,
+               deterministic: bool = True) -> jnp.ndarray:
+    """Row attention (pair-biased) -> column attention -> transition."""
+    kw = dict(attention_impl=cfg_attention_impl(cfg),
+              attention_chunk=cfg_attention_chunk(cfg))
+    upd = gated_attention(p["row_attn"], msa, n_head=cfg.n_head_msa,
+                          c_hidden=cfg.c_hidden_att, bias_input=z_bias_src, **kw)
+    if rng is not None:
+        rng, k = jax.random.split(rng)
+        upd = shared_dropout(k, upd, cfg.dropout_msa, shared_axis=0,
+                             deterministic=deterministic)
+    msa = msa + upd
+    if cfg.global_column_attn:
+        col = global_attention(p["col_attn"], msa.swapaxes(0, 1),
+                               n_head=cfg.n_head_msa, c_hidden=cfg.c_hidden_att)
+    else:
+        col = gated_attention(p["col_attn"], msa.swapaxes(0, 1),
+                              n_head=cfg.n_head_msa, c_hidden=cfg.c_hidden_att, **kw)
+    msa = msa + col.swapaxes(0, 1)
+    msa = msa + transition(p["msa_trans"], msa)
+    return msa
+
+
+def pair_branch(p: Params, cfg: EvoformerConfig, z: jnp.ndarray, *, rng=None,
+                deterministic: bool = True) -> jnp.ndarray:
+    """Triangle updates + triangle attention + transition."""
+    kw = dict(attention_impl=cfg_attention_impl(cfg),
+              attention_chunk=cfg_attention_chunk(cfg))
+
+    def drop(key_idx, x, shared_axis):
+        if rng is None:
+            return x
+        k = jax.random.fold_in(rng, key_idx)
+        return shared_dropout(k, x, cfg.dropout_pair, shared_axis=shared_axis,
+                              deterministic=deterministic)
+
+    z = z + drop(0, triangle_mult(p["tri_mul_out"], z, outgoing=True), 0)
+    z = z + drop(1, triangle_mult(p["tri_mul_in"], z, outgoing=False), 0)
+    z = z + drop(2, gated_attention(p["tri_att_start"], z, n_head=cfg.n_head_pair,
+                                    c_hidden=cfg.c_hidden_pair_att,
+                                    bias_input=z, **kw), 0)
+    zt = z.swapaxes(0, 1)
+    att_end = gated_attention(p["tri_att_end"], zt, n_head=cfg.n_head_pair,
+                              c_hidden=cfg.c_hidden_pair_att, bias_input=zt, **kw)
+    z = z + drop(3, att_end.swapaxes(0, 1), 1)
+    z = z + transition(p["pair_trans"], z)
+    return z
+
+
+def evoformer_block(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray,
+                    z: jnp.ndarray, *, rng=None, deterministic: bool = True):
+    """Dispatch on cfg.variant (paper Fig 1a/1b/1c)."""
+    rngs = (None, None) if rng is None else tuple(jax.random.split(rng))
+    if cfg.variant == "af2":
+        msa_out = msa_branch(p, cfg, msa, z, rng=rngs[0],
+                             deterministic=deterministic)
+        z = z + outer_product_mean(p["opm"], msa_out)
+        z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic)
+        return msa_out, z_out
+    if cfg.variant == "multimer":
+        z = z + outer_product_mean(p["opm"], msa)
+        msa_out = msa_branch(p, cfg, msa, z, rng=rngs[0],
+                             deterministic=deterministic)
+        z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic)
+        return msa_out, z_out
+    if cfg.variant == "parallel":
+        # Paper Fig 1c / Fig 4: both branches read only block inputs; the OPM
+        # (computed from the MSA branch output) lands at the end of the block.
+        msa_out = msa_branch(p, cfg, msa, z, rng=rngs[0],
+                             deterministic=deterministic)
+        z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic)
+        z_out = z_out + outer_product_mean(p["opm"], msa_out)
+        return msa_out, z_out
+    raise ValueError(f"unknown Evoformer variant {cfg.variant!r}")
+
+
+def cfg_attention_impl(cfg: EvoformerConfig) -> str:
+    return cfg.attention_impl
+
+
+def cfg_attention_chunk(cfg: EvoformerConfig) -> int:
+    return cfg.attention_chunk

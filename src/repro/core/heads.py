@@ -1,0 +1,99 @@
+"""Prediction heads and training losses (FAPE, distogram, masked-MSA, pLDDT)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import AlphaFold2Config
+from repro.core.structure import rigid_invert_apply
+from repro.nn import layers as nn
+
+Params = dict
+
+
+def heads_init(key, cfg: AlphaFold2Config) -> Params:
+    ks = nn.split_keys(key, 5)
+    c_s = cfg.structure.c_s
+    return {
+        "distogram": nn.dense_init(ks[0], cfg.c_z, cfg.n_distogram_bins),
+        "masked_msa": nn.dense_init(ks[1], cfg.c_m, cfg.n_aatype),
+        "plddt": {
+            "ln": nn.layernorm_init(c_s),
+            "w1": nn.dense_init(ks[2], c_s, c_s),
+            "w2": nn.dense_init(ks[3], c_s, c_s),
+            "out": nn.dense_init(ks[4], c_s, cfg.n_plddt_bins),
+        },
+    }
+
+
+def distogram_logits(p: Params, z: jnp.ndarray) -> jnp.ndarray:
+    half = nn.dense(p["distogram"], z)
+    return half + half.swapaxes(0, 1)       # symmetrize
+
+
+def masked_msa_logits(p: Params, msa: jnp.ndarray) -> jnp.ndarray:
+    return nn.dense(p["masked_msa"], msa)
+
+
+def plddt_logits(p: Params, s: jnp.ndarray) -> jnp.ndarray:
+    h = nn.layernorm(p["plddt"]["ln"], s)
+    h = jax.nn.relu(nn.dense(p["plddt"]["w1"], h))
+    h = jax.nn.relu(nn.dense(p["plddt"]["w2"], h))
+    return nn.dense(p["plddt"]["out"], h)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits, labels_onehot, mask):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.sum(labels_onehot * logp, axis=-1)
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def fape_loss(pred_rots, pred_trans, true_rots, true_trans, res_mask,
+              *, clamp: float = 10.0, scale: float = 10.0) -> jnp.ndarray:
+    """Frame-aligned point error over CA atoms (trans as point cloud).
+
+    Accepts frames with a leading trajectory axis (averaged) or a single set.
+    """
+    def single(pr, pt):
+        # local coords of every point j in every frame i
+        x_local = rigid_invert_apply(pr[:, None], pt[:, None], pt[None, :])
+        x_true = rigid_invert_apply(true_rots[:, None], true_trans[:, None],
+                                    true_trans[None, :])
+        err = jnp.sqrt(jnp.sum(jnp.square(x_local - x_true), -1) + 1e-8)
+        err = jnp.clip(err, 0.0, clamp) / scale
+        m2 = res_mask[:, None] * res_mask[None, :]
+        return jnp.sum(err * m2) / jnp.maximum(jnp.sum(m2), 1.0)
+
+    if pred_rots.ndim == 4:   # (iters, r, 3, 3) trajectory
+        return jnp.mean(jax.vmap(single)(pred_rots, pred_trans))
+    return single(pred_rots, pred_trans)
+
+
+def distogram_loss(logits, true_coords, res_mask, *, n_bins: int,
+                   min_dist: float = 2.3125, max_dist: float = 21.6875):
+    d = jnp.sqrt(jnp.sum(jnp.square(
+        true_coords[:, None] - true_coords[None, :]), -1) + 1e-8)
+    edges = jnp.linspace(min_dist, max_dist, n_bins - 1)
+    bins = jnp.sum(d[..., None] > edges, axis=-1)      # (r, r) in [0, n_bins)
+    onehot = jax.nn.one_hot(bins, n_bins)
+    m2 = res_mask[:, None] * res_mask[None, :]
+    return softmax_xent(logits, onehot, m2)
+
+
+def masked_msa_loss(logits, true_msa, mask_positions):
+    onehot = jax.nn.one_hot(true_msa, logits.shape[-1])
+    return softmax_xent(logits, onehot, mask_positions)
+
+
+def plddt_loss(logits, pred_trans, true_coords, res_mask, *, n_bins: int):
+    """Confidence head: predict binned per-residue CA error (detached target)."""
+    err = jnp.sqrt(jnp.sum(jnp.square(pred_trans - true_coords), -1) + 1e-8)
+    err = jax.lax.stop_gradient(err)
+    edges = jnp.linspace(0.5, 15.0, n_bins - 1)
+    bins = jnp.sum(err[..., None] > edges, axis=-1)
+    onehot = jax.nn.one_hot(bins, n_bins)
+    return softmax_xent(logits, onehot, res_mask)

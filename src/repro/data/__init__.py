@@ -1,0 +1,3 @@
+from repro.data.protein import protein_batch, protein_sample  # noqa: F401
+from repro.data.tokens import token_batch  # noqa: F401
+from repro.data.loader import ShardedLoader  # noqa: F401

@@ -1,0 +1,55 @@
+"""Host-sharded, double-buffered data loader.
+
+Deterministic batch synthesis (protein or token) per (seed, step); each host
+produces only its shard and the loader prefetches the next batch on a worker
+thread while the current step runs — the standard input-pipeline overlap.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+
+class ShardedLoader:
+    def __init__(self, make_batch: Callable[[int], dict], *,
+                 start_step: int = 0, prefetch: int = 2):
+        self._make_batch = make_batch
+        self._step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._make_batch(step)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __iter__(self) -> Iterator:
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+        try:
+            while True:
+                step, batch = self._q.get()
+                yield step, batch
+        finally:
+            self.close()
+
+    def close(self):
+        self._stop.set()
+        if self._thread is not None:
+            # drain so the worker unblocks
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=2.0)
+            self._thread = None

@@ -1,0 +1,28 @@
+"""Synthetic LM token streams (deterministic, host-shardable)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def token_batch(seed: int, step: int, batch: int, seq_len: int, vocab: int,
+                *, host_id: int = 0, n_hosts: int = 1) -> dict:
+    """Markov-ish synthetic tokens: deterministic in (seed, step, row).
+
+    Each host materializes only its batch shard (rows
+    ``host_id * batch//n_hosts : (host_id+1) * batch//n_hosts``).
+    """
+    assert batch % n_hosts == 0
+    local = batch // n_hosts
+    rows = np.arange(host_id * local, (host_id + 1) * local, dtype=np.uint64)
+    rng = np.random.Generator(np.random.Philox(key=seed + (step << 20)))
+    # per-row independent streams via Philox counter jump
+    out = np.empty((local, seq_len + 1), np.int32)
+    for i, row in enumerate(rows):
+        r = np.random.Generator(np.random.Philox(key=seed, counter=[step, row, 0, 0]))
+        base = r.integers(0, vocab, size=seq_len + 1, dtype=np.int64)
+        # induce local structure (learnable bigram-ish patterns)
+        rep = r.integers(2, 8)
+        base[rep::rep] = base[:-rep:rep]
+        out[i] = (base % vocab).astype(np.int32)
+    del rng
+    return {"tokens": out[:, :-1], "labels": out[:, 1:]}

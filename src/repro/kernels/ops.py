@@ -1,0 +1,69 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Forward = Pallas kernel (interpret mode on CPU, Mosaic on TPU); backward =
+``custom_vjp`` falling back to the memory-efficient chunked XLA path (the
+flash backward kernel recomputes attention anyway, so the chunked VJP has
+the same asymptotics; a dedicated bwd kernel is a further TPU optimization).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fk
+from repro.nn.attention import attention_chunked
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True,
+                    scale: Optional[float] = None):
+    return fk.flash_attention_fwd(q, k, v, causal=causal, scale=scale,
+                                  interpret=not _on_tpu())
+
+
+def _fa_fwd(q, k, v, causal, scale):
+    return flash_attention(q, k, v, causal, scale), (q, k, v)
+
+
+def _fa_bwd(causal, scale, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: attention_chunked(q, k, v, causal=causal, scale=scale),
+        q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(5,))
+def evo_attention(q, k, v, bias, gate, scale: Optional[float] = None):
+    """Fused AF2 gated-bias attention: sigmoid(gate) * attn(q,k,v;bias)."""
+    return fk.evo_attention_fwd(q, k, v, bias, gate, scale=scale,
+                                interpret=not _on_tpu())
+
+
+def _ref_evo(q, k, v, bias, gate, scale):
+    o = attention_chunked(q, k, v, bias=bias, scale=scale,
+                          chunk_size=max(k.shape[-3] // 4, 1))
+    return jax.nn.sigmoid(gate.astype(jnp.float32)).astype(o.dtype) * o
+
+
+def _ea_fwd(q, k, v, bias, gate, scale):
+    return evo_attention(q, k, v, bias, gate, scale), (q, k, v, bias, gate)
+
+
+def _ea_bwd(scale, res, g):
+    q, k, v, bias, gate = res
+    _, vjp = jax.vjp(lambda *a: _ref_evo(*a, scale), q, k, v, bias, gate)
+    return vjp(g)
+
+
+evo_attention.defvjp(_ea_fwd, _ea_bwd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels (kernel-vs-ref allclose tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import attention_reference
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """LM GQA attention oracle. q (B,S,H,D); k/v (B,T,KV,D)."""
+    return attention_reference(q, k, v, causal=causal, scale=scale)
+
+
+def evo_attention_ref(q, k, v, bias, gate) -> jnp.ndarray:
+    """AF2 gated bias attention oracle.
+
+    q/k/v: (L, S, H, C) — attention along S per lead row L;
+    bias: (H, S, S) (pair bias, shared across rows);
+    gate: (L, S, H, C) sigmoid-gating values (pre-sigmoid logits).
+    Returns (L, S, H, C).
+    """
+    o = attention_reference(q, k, v, bias=bias)
+    return jax.nn.sigmoid(gate.astype(jnp.float32)).astype(o.dtype) * o

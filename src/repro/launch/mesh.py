@@ -1,0 +1,36 @@
+"""Production mesh (spec-fixed shapes) + logical refactorings.
+
+``make_production_mesh`` is a FUNCTION so importing this module never touches
+jax device state.  The physical mesh is (data, model) = (16, 16) per pod;
+multi-pod prepends a pod axis (2, 16, 16).  Logical views:
+
+* LM archs: 'model' = tensor/expert parallel, 'pod' folds into data-parallel.
+* AlphaFold2 + BP: 'model' -> ('branch', 'dap') = (2, 8) — the paper's
+  BP=2 x DAP hybrid (§4.3); 'pod'+'data' are the DP axes (batch 128..256).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.parallel.mesh_utils import refactor_mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def af2_logical_mesh(mesh, *, bp: int = 2, dap: int = 8):
+    """(…, data, model) -> (…, data, branch, dap) with branch*dap = model."""
+    model = mesh.shape["model"]
+    if bp * dap != model:
+        raise ValueError(f"bp({bp}) * dap({dap}) != model axis ({model})")
+    split = [("branch", bp), ("dap", dap)] if bp > 1 else [("dap", dap)]
+    if dap == 1 and bp > 1:
+        split = [("branch", bp)]
+    return refactor_mesh(mesh, {"model": split})
+
+
+def dp_axes_of(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,211 @@
+"""Training launcher.
+
+On the production pod this runs under the multi-host runtime (one process
+per host; jax.distributed.initialize); on CPU it drives reduced configs for
+end-to-end validation.  Integrates: sharded data pipeline, checkpoint
+manager (atomic/keep-N/async + preemption save), straggler watchdog, and
+either the AF2 shard_map step (BP x DAP x DP) or the LM GSPMD step.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --af2 tiny --steps 20 \
+      --devices 8 --bp 2 --dap 2 --batch 8
+  PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
+      --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="assigned LM arch id")
+    ap.add_argument("--af2", choices=["tiny", "initial", "finetune"])
+    ap.add_argument("--variant", default="parallel")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake host devices (CPU validation only)")
+    ap.add_argument("--bp", type=int, default=1)
+    ap.add_argument("--dap", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--compress-pod-grads", action="store_true")
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.train.checkpoint import CheckpointManager, StepWatchdog
+    from repro.train.optim import adamw, af2_lr_schedule, warmup_cosine
+    from repro.data.loader import ShardedLoader
+
+    if args.af2:
+        run_af2(args, jax, jnp, np)
+    else:
+        run_lm(args, jax, jnp, np)
+
+
+def run_af2(args, jax, jnp, np):
+    from repro.core.config import af2_tiny, af2_initial, af2_finetune
+    from repro.core import model as af2
+    from repro.data.protein import protein_batch
+    from repro.data.loader import ShardedLoader
+    from repro.train.checkpoint import CheckpointManager, StepWatchdog
+    from repro.train.optim import adamw, af2_lr_schedule
+    from repro.train.trainstep import make_af2_train_step
+    from repro.parallel.grad_sync import zeros_error_state
+
+    cfg = {"tiny": af2_tiny, "initial": af2_initial,
+           "finetune": af2_finetune}[args.af2](variant=args.variant)
+    n_dev = len(jax.devices())
+    dp = max(1, n_dev // (args.bp * args.dap))
+    axes, shape = [], []
+    if dp > 1:
+        axes.append("data"); shape.append(dp)
+    if args.bp > 1:
+        axes.append("branch"); shape.append(args.bp)
+    if args.dap > 1:
+        axes.append("dap"); shape.append(args.dap)
+    if not axes:
+        axes, shape = ["data"], [1]
+    mesh = jax.make_mesh(tuple(shape), tuple(axes))
+    print(f"mesh: {dict(zip(axes, shape))}  devices={n_dev}")
+
+    opt = adamw(af2_lr_schedule(args.lr, warmup_steps=100), clip_norm=0.1)
+    params = af2.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"params: {n_params:,}")
+    step_fn, _ = make_af2_train_step(
+        cfg, opt, mesh, bp=args.bp > 1, dap=args.dap,
+        compress_pod_grads=args.compress_pod_grads,
+        n_recycle=1, deterministic=False)
+    state = {"params": params, "opt": opt.init(params)}
+    if args.compress_pod_grads:
+        state["err"] = zeros_error_state(params)
+
+    start = 0
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=3, install_sigterm=True)
+        if args.resume:
+            try:
+                state, start = mgr.restore_latest(state)
+                print(f"resumed from step {start}")
+            except FileNotFoundError:
+                pass
+
+    fn = jax.jit(step_fn, donate_argnums=(0,))
+    wd = StepWatchdog(on_straggler=lambda s, dt, ema: print(
+        f"  [watchdog] step {s} took {dt:.2f}s (EMA {ema:.2f}s)"))
+    loader = ShardedLoader(lambda s: protein_batch(0, s, args.batch, cfg),
+                           start_step=start)
+    t_start = time.time()
+    try:
+        for step, batch in loader:
+            if step >= args.steps:
+                break
+            wd.start_step()
+            state, metrics = fn(state, batch, jax.random.PRNGKey(step))
+            loss = float(metrics["loss"])
+            wd.end_step(step)
+            if step % args.log_every == 0:
+                print(f"step {step:5d}  loss {loss:.4f}  "
+                      f"({args.batch / max(wd.ema or 1e-9, 1e-9):.2f} protein/s)")
+            if mgr and step and step % args.ckpt_every == 0:
+                mgr.save(step, state)
+    finally:
+        loader.close()
+    if mgr:
+        mgr.save(args.steps, state)
+        mgr.wait()
+    print(f"done: {args.steps} steps in {time.time() - t_start:.1f}s; "
+          f"stragglers flagged: {len(wd.flagged)}")
+
+
+def run_lm(args, jax, jnp, np):
+    from repro import configs as cfglib
+    from repro.models import get_model
+    from repro.data.tokens import token_batch
+    from repro.data.loader import ShardedLoader
+    from repro.train.checkpoint import CheckpointManager, StepWatchdog
+    from repro.train.optim import adamw, warmup_cosine
+    from repro.train.trainstep import make_lm_train_step
+
+    cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
+           else cfglib.get_config(args.arch))
+    model = get_model(cfg)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    opt = adamw(warmup_cosine(args.lr, 20, args.steps), clip_norm=1.0)
+    step_fn, state_shardings, batch_sharding = make_lm_train_step(
+        model, cfg, opt, mesh)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.arch_id}: {n_params:,} params (smoke={args.smoke})")
+    state = {"params": params, "opt": opt.init(params)}
+
+    def make_batch(step):
+        b = token_batch(0, step, args.batch, args.seq, cfg.vocab)
+        out = {"tokens": jnp.asarray(b["tokens"]),
+               "labels": jnp.asarray(b["labels"])}
+        if cfg.family == "audio":
+            out["frames"] = jax.random.normal(
+                jax.random.PRNGKey(step),
+                (args.batch, cfg.n_frontend_tokens, cfg.frontend_dim),
+                jnp.bfloat16)
+        if cfg.family == "vlm":
+            out["patches"] = jax.random.normal(
+                jax.random.PRNGKey(step),
+                (args.batch, cfg.n_frontend_tokens, cfg.frontend_dim),
+                jnp.bfloat16)
+        return out
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=3) if args.ckpt_dir else None
+    start = 0
+    if mgr and args.resume:
+        try:
+            state, start = mgr.restore_latest(state)
+            print(f"resumed from step {start}")
+        except FileNotFoundError:
+            pass
+    fn = jax.jit(step_fn, donate_argnums=(0,))
+    wd = StepWatchdog()
+    loader = ShardedLoader(make_batch, start_step=start)
+    try:
+        for step, batch in loader:
+            if step >= args.steps:
+                break
+            wd.start_step()
+            state, metrics = fn(state, batch)
+            loss = float(metrics["loss"])
+            wd.end_step(step)
+            if step % args.log_every == 0:
+                tokps = args.batch * args.seq / max(wd.ema or 1e-9, 1e-9)
+                print(f"step {step:5d}  loss {loss:.4f}  ({tokps:,.0f} tok/s)")
+            if mgr and step and step % args.ckpt_every == 0:
+                mgr.save(step, state)
+    finally:
+        loader.close()
+    if mgr:
+        mgr.save(args.steps, state)
+        mgr.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Assigned-architecture model zoo. ``get_model(cfg)`` returns the module
+implementing the uniform API: init_params / loss / forward / init_cache /
+prefill / decode_step / partition_rules."""
+from repro.models.lmconfig import LMConfig  # noqa: F401
+
+
+def get_model(cfg: LMConfig):
+    from repro.models import dense, moe, ssm, hybrid, whisper, vlm
+    return {
+        "dense": dense, "moe": moe, "ssm": ssm, "hybrid": hybrid,
+        "audio": whisper, "vlm": vlm,
+    }[cfg.family]

@@ -1,0 +1,284 @@
+"""Dense decoder-only transformer (GQA + RoPE + SwiGLU + RMSNorm).
+
+Covers glm4-9b, qwen1.5-110b (QKV bias), deepseek-67b, deepseek-coder-33b,
+and serves as the backbone for whisper/vlm wrappers.  ``lax.scan`` over
+stacked layer params keeps HLO size depth-independent (compile-scalability,
+DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.lmconfig import LMConfig
+from repro.nn import layers as nn
+from repro.nn.attention import attention, decode_attention
+from repro.nn.rope import apply_rope
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 5)
+    d, hd = cfg.d_model, cfg.d_head
+    return {
+        "ln1": nn.rmsnorm_init(d),
+        "wq": nn.dense_init(ks[0], d, cfg.n_head * hd, use_bias=cfg.qkv_bias),
+        "wk": nn.dense_init(ks[1], d, cfg.n_kv_head * hd, use_bias=cfg.qkv_bias),
+        "wv": nn.dense_init(ks[2], d, cfg.n_kv_head * hd, use_bias=cfg.qkv_bias),
+        "wo": nn.dense_init(ks[3], cfg.n_head * hd, d, use_bias=False),
+        "ln2": nn.rmsnorm_init(d),
+        "mlp": nn.swiglu_init(ks[4], d, cfg.d_ff),
+    }
+
+
+def init_params(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layer)
+    if cfg.scan_layers:
+        layers = jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+    else:
+        layers = [layer_init(k, cfg) for k in layer_keys]
+    p = {
+        "embed": nn.embedding_init(ks[1], cfg.vocab, cfg.d_model),
+        "layers": layers,
+        "ln_f": nn.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = nn.dense_init(ks[2], cfg.d_model, cfg.vocab,
+                                     use_bias=False)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def attention_block(p, cfg: LMConfig, x, positions, *, causal=True,
+                    kv_cache: Optional[tuple] = None, cache_lengths=None):
+    """Returns (out, (k, v)) — new K/V for cache maintenance."""
+    b, s, d = x.shape
+    h = nn.rmsnorm(p["ln1"], x)
+    q = nn.dense(p["wq"], h).reshape(b, s, cfg.n_head, cfg.d_head)
+    k = nn.dense(p["wk"], h).reshape(b, s, cfg.n_kv_head, cfg.d_head)
+    v = nn.dense(p["wv"], h).reshape(b, s, cfg.n_kv_head, cfg.d_head)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    if kv_cache is not None:
+        o = decode_attention(q, kv_cache[0], kv_cache[1], lengths=cache_lengths)
+    else:
+        o = attention(q, k, v, causal=causal, impl=cfg.attention_impl,
+                      chunk_size=cfg.attention_chunk)
+    o = nn.dense(p["wo"], o.reshape(b, s, cfg.n_head * cfg.d_head))
+    return o, (k, v)
+
+
+def layer_apply(p, cfg: LMConfig, x, positions, *, causal=True,
+                kv_cache=None, cache_lengths=None):
+    if cfg.parallel_block:
+        # PaLM-style: x + Attn(LN1 x) + MLP(LN2 x) — two independent branches
+        att, kv = attention_block(p, cfg, x, positions, causal=causal,
+                                  kv_cache=kv_cache,
+                                  cache_lengths=cache_lengths)
+        mlp = nn.swiglu(p["mlp"], nn.rmsnorm(p["ln2"], x))
+        return (x + att + mlp).astype(att.dtype), kv
+    att, kv = attention_block(p, cfg, x, positions, causal=causal,
+                              kv_cache=kv_cache, cache_lengths=cache_lengths)
+    x = x + att
+    x = x + nn.swiglu(p["mlp"], nn.rmsnorm(p["ln2"], x))
+    return x.astype(att.dtype), kv
+
+
+def bp_parallel_layer(p, cfg: LMConfig, x, positions, *, causal=True,
+                      axis: str = "branch"):
+    """Branch-Parallel dense layer (beyond-paper; DESIGN.md §5): device
+    (branch=0) computes the attention branch, (branch=1) the MLP branch of a
+    PaLM-style parallel block; one psum merges them — the paper's BP applied
+    to an LM. Requires ``cfg.parallel_block`` and a 'branch' mesh axis of 2
+    inside shard_map. Numerically exact vs ``layer_apply`` (tests)."""
+    from repro.parallel.branch import branch_parallel
+    if not cfg.parallel_block:
+        raise ValueError("BP on dense LMs requires parallel_block=True "
+                         "(sequential blocks have a serial dependency)")
+
+    def attn_branch():
+        att, _ = attention_block(p, cfg, x, positions, causal=causal)
+        return att
+
+    def mlp_branch():
+        return nn.swiglu(p["mlp"], nn.rmsnorm(p["ln2"], x))
+
+    att, mlp = branch_parallel([attn_branch, mlp_branch], axis=axis)()
+    return (x + att + mlp).astype(x.dtype), None
+
+
+def backbone(params, cfg: LMConfig, x, positions, *, causal=True,
+             constrain=None):
+    """Run the layer stack on embeddings x (B, S, D)."""
+    cst = constrain or (lambda t: t)
+
+    def one(x, lp):
+        x, _ = layer_apply(lp, cfg, x, positions, causal=causal)
+        return cst(x), None
+
+    if cfg.remat == "layer":
+        one = jax.checkpoint(one)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(one, x, params["layers"])
+    else:
+        for lp in params["layers"]:
+            x, _ = one(x, lp)
+    return nn.rmsnorm(params["ln_f"], x)
+
+
+def logits_fn(params, cfg: LMConfig, x):
+    if cfg.tie_embeddings or "lm_head" not in params:
+        return x @ params["embed"]["table"].astype(x.dtype).T
+    return nn.dense(params["lm_head"], x)
+
+
+def forward(params, cfg: LMConfig, tokens, *, constrain=None):
+    params = nn.BF16.cast(params)
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = backbone(params, cfg, x, positions, constrain=constrain)
+    return logits_fn(params, cfg, x)
+
+
+def cross_entropy(logits, labels, *, mask=None):
+    lse = jax.scipy.special.logsumexp(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.einsum("...v,...v->...", logits, onehot).astype(jnp.float32)
+    nll = lse - label_logit
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss(params, cfg: LMConfig, batch, *, constrain=None):
+    logits = forward(params, cfg, batch["tokens"], constrain=constrain)
+    return cross_entropy(logits, batch["labels"], mask=batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: cache + prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layer, batch, max_len, cfg.n_kv_head, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "length": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(params, cfg: LMConfig, tokens, cache):
+    """Fill the cache with the prompt; returns (last-token logits, cache)."""
+    params = nn.BF16.cast(params)
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def one(x, xs):
+        lp, kc, vc = xs
+        x, (k, v) = layer_apply(lp, cfg, x, positions, causal=True)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), 0, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), 0, 1)
+        return x, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (kc, vc) = jax.lax.scan(one, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks, vs = [], []
+        for i, lp in enumerate(params["layers"]):
+            x, (kc, vc) = one(x, (lp, cache["k"][i], cache["v"][i]))
+            ks.append(kc); vs.append(vc)
+        kc, vc = jnp.stack(ks), jnp.stack(vs)
+    x = nn.rmsnorm(params["ln_f"], x)
+    logits = logits_fn(params, cfg, x[:, -1:])
+    return logits, {"k": kc, "v": vc,
+                    "length": jnp.full((b,), s, jnp.int32)}
+
+
+def write_kv_cache(c, new, lengths, *, uniform: bool):
+    """Write (B, 1, KV, Hd) into the (B, T, KV, Hd) cache at each sequence's
+    length.  ``uniform=True`` (all lengths equal — the production serve_step
+    contract) uses a single scalar-indexed dynamic-update-slice, which GSPMD
+    partitions along B/KV/Hd without resharding; the per-sequence scatter
+    path is kept for the continuous-batching engine."""
+    if uniform:
+        return jax.lax.dynamic_update_slice(
+            c, new.astype(c.dtype), (0, lengths[0], 0, 0))
+    return jax.vmap(
+        lambda cb, nb, i: jax.lax.dynamic_update_slice_in_dim(
+            cb, nb.astype(cb.dtype), i, 0))(c, new, lengths)
+
+
+def decode_step(params, cfg: LMConfig, tokens1, cache):
+    """One decode step: tokens1 (B, 1) -> (logits (B, 1, V), new cache)."""
+    params = nn.BF16.cast(params)
+    b = tokens1.shape[0]
+    x = params["embed"]["table"][tokens1]
+    positions = cache["length"][:, None]            # (B, 1)
+
+    def one(x, xs):
+        lp, kc, vc = xs
+        h = nn.rmsnorm(lp["ln1"], x)
+        q = nn.dense(lp["wq"], h).reshape(b, 1, cfg.n_head, cfg.d_head)
+        k = nn.dense(lp["wk"], h).reshape(b, 1, cfg.n_kv_head, cfg.d_head)
+        v = nn.dense(lp["wv"], h).reshape(b, 1, cfg.n_kv_head, cfg.d_head)
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+        kc = write_kv_cache(kc, k, cache["length"], uniform=cfg.uniform_decode)
+        vc = write_kv_cache(vc, v, cache["length"], uniform=cfg.uniform_decode)
+        o = decode_attention(q, kc, vc, lengths=cache["length"] + 1)
+        att = nn.dense(lp["wo"], o.reshape(b, 1, cfg.n_head * cfg.d_head))
+        if cfg.parallel_block:
+            x = x + att + nn.swiglu(lp["mlp"], nn.rmsnorm(lp["ln2"], x))
+        else:
+            x = x + att
+            x = x + nn.swiglu(lp["mlp"], nn.rmsnorm(lp["ln2"], x))
+        return x.astype(o.dtype), (kc, vc)
+
+    if cfg.scan_layers:
+        x, (kc, vc) = jax.lax.scan(one, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks, vs = [], []
+        for i, lp in enumerate(params["layers"]):
+            x, (kc, vc) = one(x, (lp, cache["k"][i], cache["v"][i]))
+            ks.append(kc); vs.append(vc)
+        kc, vc = jnp.stack(ks), jnp.stack(vs)
+    x = nn.rmsnorm(params["ln_f"], x)
+    logits = logits_fn(params, cfg, x)
+    return logits, {"k": kc, "v": vc, "length": cache["length"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# partitioning (TP over 'model'/'tp' axis; optional FSDP over 'data')
+# ---------------------------------------------------------------------------
+
+def partition_rules(cfg: LMConfig, *, tp_axis="model", fsdp_axis="data"):
+    """Megatron-style TP (heads/ffn/vocab) + optional ZeRO-3 FSDP over data.
+
+    Rules are written for the scan-stacked layer layout (leading layer dim
+    unsharded) when cfg.scan_layers; per-layer layout otherwise.
+    """
+    fs = fsdp_axis if cfg.fsdp else None
+    lay = ((lambda *sp: P(None, *sp)) if cfg.scan_layers else
+           (lambda *sp: P(*sp)))
+    return [
+        (r"embed/table", P(tp_axis, fs)),
+        (r"lm_head/w", P(fs, tp_axis)),
+        (r"w[qkv]/w", lay(fs, tp_axis)),
+        (r"w[qkv]/b", lay(tp_axis)),
+        (r"wo/w", lay(tp_axis, fs)),
+        (r"mlp/w_(gate|up)/w", lay(fs, tp_axis)),
+        (r"mlp/w_down/w", lay(tp_axis, fs)),
+        (r"ln", P()),
+    ]

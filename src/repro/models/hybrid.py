@@ -1,0 +1,295 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a weight-SHARED attention block
+applied every ``shared_attn_every`` layers (arXiv:2411.15242).
+
+The shared block consumes concat(hidden, initial_embedding) — Zamba2's
+re-use of the prompt embedding — projected back to d_model, then full MHA +
+MLP.  Its parameters are applied at every invocation (weights shared), but
+each invocation has its own KV cache at decode time.
+
+BP applicability (DESIGN.md §5): at shared-block layers the mamba branch and
+the attention branch are architecturally parallel (both read the same block
+input) — ``branch_parallel`` can split them; implemented in
+``bp_hybrid_layer`` and exercised by tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.lmconfig import LMConfig
+from repro.models import ssm, dense
+from repro.nn import layers as nn
+from repro.nn.attention import attention, decode_attention
+from repro.nn.rope import apply_rope
+
+Params = dict
+
+
+def n_shared_invocations(cfg: LMConfig) -> int:
+    every = cfg.shared_attn_every
+    return (cfg.n_layer + every - 1) // every if every else 0
+
+
+def shared_block_init(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 6)
+    d, hd = cfg.d_model, cfg.d_head
+    return {
+        "fuse": nn.dense_init(ks[0], 2 * d, d, use_bias=False),
+        "ln1": nn.rmsnorm_init(d),
+        "wq": nn.dense_init(ks[1], d, cfg.n_head * hd, use_bias=False),
+        "wk": nn.dense_init(ks[2], d, cfg.n_kv_head * hd, use_bias=False),
+        "wv": nn.dense_init(ks[3], d, cfg.n_kv_head * hd, use_bias=False),
+        "wo": nn.dense_init(ks[4], cfg.n_head * hd, d, use_bias=False),
+        "ln2": nn.rmsnorm_init(d),
+        "mlp": nn.swiglu_init(ks[5], d, cfg.d_ff),
+    }
+
+
+def shared_block_apply(p, cfg: LMConfig, x, x0, positions, *,
+                       kv_cache=None, cache_lengths=None):
+    """Returns (update, (k, v)) to be added to x."""
+    b, s, d = x.shape
+    h = nn.dense(p["fuse"], jnp.concatenate([x, x0], axis=-1))
+    hn = nn.rmsnorm(p["ln1"], h)
+    q = nn.dense(p["wq"], hn).reshape(b, s, cfg.n_head, cfg.d_head)
+    k = nn.dense(p["wk"], hn).reshape(b, s, cfg.n_kv_head, cfg.d_head)
+    v = nn.dense(p["wv"], hn).reshape(b, s, cfg.n_kv_head, cfg.d_head)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    if kv_cache is not None:
+        o = decode_attention(q, kv_cache[0], kv_cache[1], lengths=cache_lengths)
+    else:
+        o = attention(q, k, v, causal=True, impl=cfg.attention_impl,
+                      chunk_size=cfg.attention_chunk)
+    h = h + nn.dense(p["wo"], o.reshape(b, s, cfg.n_head * cfg.d_head))
+    h = h + nn.swiglu(p["mlp"], nn.rmsnorm(p["ln2"], h))
+    return h.astype(x.dtype), (k, v)
+
+
+def init_params(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layer)
+    layers = (jax.vmap(lambda k: ssm.block_init(k, cfg))(layer_keys)
+              if cfg.scan_layers else [ssm.block_init(k, cfg)
+                                       for k in layer_keys])
+    return {
+        "embed": nn.embedding_init(ks[1], cfg.vocab, cfg.d_model),
+        "layers": layers,
+        "shared": shared_block_init(ks[2], cfg),
+        "ln_f": nn.rmsnorm_init(cfg.d_model),
+        "lm_head": nn.dense_init(ks[3], cfg.d_model, cfg.vocab, use_bias=False),
+    }
+
+
+def forward(params, cfg: LMConfig, tokens, *, constrain=None):
+    params = nn.BF16.cast(params)
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens]
+    x0 = x
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cst = constrain or (lambda t: t)
+    every = cfg.shared_attn_every
+    apply_m = jax.vmap(lambda lp, xx: ssm.block_apply(lp, cfg, xx),
+                       in_axes=(None, 0))
+
+    def one(x, xs):
+        lp, idx = xs
+        x = (x + apply_m(lp, x)).astype(x.dtype)
+        def with_shared(x):
+            upd, _ = shared_block_apply(params["shared"], cfg, x, x0, positions)
+            return (x + upd).astype(x.dtype)
+        x = jax.lax.cond(idx % every == 0, with_shared, lambda x: x, x)
+        return cst(x), None
+
+    if cfg.remat == "layer":
+        one = jax.checkpoint(one)
+    idxs = jnp.arange(cfg.n_layer)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(one, x, (params["layers"], idxs))
+    else:
+        for i, lp in enumerate(params["layers"]):
+            x, _ = one(x, (lp, jnp.asarray(i)))
+    x = nn.rmsnorm(params["ln_f"], x)
+    return nn.dense(params["lm_head"], x)
+
+
+def loss(params, cfg: LMConfig, batch, *, constrain=None):
+    logits = forward(params, cfg, batch["tokens"], constrain=constrain)
+    return dense.cross_entropy(logits, batch["labels"], mask=batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving: mamba states + per-invocation KV caches for the shared block
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    ssm_cache = ssm.init_cache(cfg, batch, max_len, dtype)
+    ninv = n_shared_invocations(cfg)
+    kv_shape = (ninv, batch, max_len, cfg.n_kv_head, cfg.d_head)
+    return {**ssm_cache, "shared_k": jnp.zeros(kv_shape, dtype),
+            "shared_v": jnp.zeros(kv_shape, dtype)}
+
+
+def prefill(params, cfg: LMConfig, tokens, cache):
+    params = nn.BF16.cast(params)
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens]
+    x0 = x
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    every = cfg.shared_attn_every
+
+    def one(carry, xs):
+        x, sk, sv = carry
+        lp, idx = xs
+        y, st = _mamba_with_state(lp, cfg, x)
+        x = (x + y).astype(x.dtype)
+
+        def with_shared(args):
+            x, sk, sv = args
+            upd, (k, v) = shared_block_apply(params["shared"], cfg, x, x0,
+                                             positions)
+            inv = idx // every
+            sk = jax.lax.dynamic_update_index_in_dim(
+                sk, jax.lax.dynamic_update_slice_in_dim(
+                    sk[inv], k.astype(sk.dtype), 0, 1), inv, 0)
+            sv = jax.lax.dynamic_update_index_in_dim(
+                sv, jax.lax.dynamic_update_slice_in_dim(
+                    sv[inv], v.astype(sv.dtype), 0, 1), inv, 0)
+            return (x + upd).astype(x.dtype), sk, sv
+
+        x, sk, sv = jax.lax.cond(idx % every == 0, with_shared,
+                                 lambda a: a, (x, sk, sv))
+        return (x, sk, sv), st
+
+    idxs = jnp.arange(cfg.n_layer)
+    if cfg.scan_layers:
+        (x, sk, sv), (conv_s, S) = jax.lax.scan(
+            one, (x, cache["shared_k"], cache["shared_v"]),
+            (params["layers"], idxs))
+    else:
+        sk, sv = cache["shared_k"], cache["shared_v"]
+        cs, ss_ = [], []
+        for i, lp in enumerate(params["layers"]):
+            (x, sk, sv), (c_, s_) = one((x, sk, sv), (lp, jnp.asarray(i)))
+            cs.append(c_); ss_.append(s_)
+        conv_s, S = jnp.stack(cs), jnp.stack(ss_)
+    x = nn.rmsnorm(params["ln_f"], x)
+    logits = nn.dense(params["lm_head"], x[:, -1:])
+    return logits, {"conv": conv_s.astype(cache["conv"].dtype), "S": S,
+                    "shared_k": sk, "shared_v": sv,
+                    "length": jnp.full((b,), s, jnp.int32)}
+
+
+def _mamba_with_state(lp, cfg, x):
+    """vmapped mamba block returning output + final (conv, S) state."""
+    def seq_fn(xs):
+        t = xs.shape[0]
+        h_ = nn.rmsnorm(lp["ln"], xs)
+        z = nn.dense(lp["wz"], h_)
+        xin = nn.dense(lp["wx"], h_)
+        Bp = nn.dense(lp["wB"], h_)
+        Cp = nn.dense(lp["wC"], h_)
+        dt = jax.nn.softplus(nn.dense(lp["wdt"], h_).astype(jnp.float32)
+                             + lp["dt_bias"])
+        xbc = jnp.concatenate([xin, Bp, Cp], axis=-1)
+        conv_state = xbc[-(cfg.ssm_conv - 1):]
+        xbc, _ = ssm._causal_conv(xbc, lp["conv_w"].astype(xbc.dtype))
+        xbc = jax.nn.silu(xbc)
+        di, n = cfg.d_inner, cfg.ssm_state
+        xin2, Bp2, Cp2 = xbc[:, :di], xbc[:, di:di + n], xbc[:, di + n:]
+        xh = xin2.reshape(t, cfg.n_ssm_heads, cfg.ssm_head_dim)
+        A = -jnp.exp(lp["A_log"])
+
+        def step(S, inp):
+            xt, dtt, Bt = inp
+            decay = jnp.exp(dtt * A)
+            return S * decay[:, None, None] + jnp.einsum(
+                "n,hp->hnp", Bt, xt * dtt[:, None]), None
+        S0 = jnp.zeros((cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                       jnp.float32)
+        S, _ = jax.lax.scan(step, S0, (xh.astype(jnp.float32), dt,
+                                       Bp2.astype(jnp.float32)))
+        y = ssm.ssd_chunked(xh, dt, A, Bp2, Cp2, lp["D"],
+                            chunk=min(cfg.ssm_chunk, t))
+        y = y.reshape(t, di).astype(xs.dtype)
+        y = nn.rmsnorm(lp["gate_ln"], y * jax.nn.silu(z))
+        return nn.dense(lp["out"], y), (conv_state, S)
+    return jax.vmap(seq_fn)(x)
+
+
+def decode_step(params, cfg: LMConfig, tokens1, cache):
+    params = nn.BF16.cast(params)
+    b = tokens1.shape[0]
+    x = params["embed"]["table"][tokens1][:, 0]          # (B, D)
+    x0 = x
+    positions = cache["length"][:, None]
+    every = cfg.shared_attn_every
+
+    def one(carry, xs):
+        x, sk, sv = carry
+        lp, conv_s, S, idx = xs
+        y, st = jax.vmap(lambda xx, c, s: ssm.block_decode(
+            lp, cfg, xx, {"conv": c, "S": s}))(x, conv_s, S)
+        x = (x + y).astype(x.dtype)
+
+        def with_shared(args):
+            x, sk, sv = args
+            inv = idx // every
+            kc, vc = sk[inv], sv[inv]
+            h = nn.dense(params["shared"]["fuse"],
+                         jnp.concatenate([x, x0], axis=-1))[:, None]
+            hn = nn.rmsnorm(params["shared"]["ln1"], h)
+            sp = params["shared"]
+            q = nn.dense(sp["wq"], hn).reshape(b, 1, cfg.n_head, cfg.d_head)
+            k = nn.dense(sp["wk"], hn).reshape(b, 1, cfg.n_kv_head, cfg.d_head)
+            v = nn.dense(sp["wv"], hn).reshape(b, 1, cfg.n_kv_head, cfg.d_head)
+            q = apply_rope(q, positions, theta=cfg.rope_theta)
+            k = apply_rope(k, positions, theta=cfg.rope_theta)
+            kc = dense.write_kv_cache(kc, k, cache["length"],
+                                      uniform=cfg.uniform_decode)
+            vc = dense.write_kv_cache(vc, v, cache["length"],
+                                      uniform=cfg.uniform_decode)
+            o = decode_attention(q, kc, vc, lengths=cache["length"] + 1)
+            h = h + nn.dense(sp["wo"], o.reshape(b, 1, cfg.n_head * cfg.d_head))
+            h = h + nn.swiglu(sp["mlp"], nn.rmsnorm(sp["ln2"], h))
+            sk = jax.lax.dynamic_update_index_in_dim(sk, kc, inv, 0)
+            sv = jax.lax.dynamic_update_index_in_dim(sv, vc, inv, 0)
+            return (x + h[:, 0]).astype(x.dtype), sk, sv
+
+        x, sk, sv = jax.lax.cond(idx % every == 0, with_shared,
+                                 lambda a: a, (x, sk, sv))
+        return (x, sk, sv), (st["conv"], st["S"])
+
+    idxs = jnp.arange(cfg.n_layer)
+    if cfg.scan_layers:
+        (x, sk, sv), (conv_s, S) = jax.lax.scan(
+            one, (x, cache["shared_k"], cache["shared_v"]),
+            (params["layers"], cache["conv"], cache["S"], idxs))
+    else:
+        sk, sv = cache["shared_k"], cache["shared_v"]
+        cs, ss_ = [], []
+        for i, lp in enumerate(params["layers"]):
+            (x, sk, sv), (c_, s_) = one(
+                (x, sk, sv), (lp, cache["conv"][i], cache["S"][i], jnp.asarray(i)))
+            cs.append(c_); ss_.append(s_)
+        conv_s, S = jnp.stack(cs), jnp.stack(ss_)
+    x = nn.rmsnorm(params["ln_f"], x)
+    logits = nn.dense(params["lm_head"], x[:, None])
+    return logits, {"conv": conv_s.astype(cache["conv"].dtype), "S": S,
+                    "shared_k": sk, "shared_v": sv,
+                    "length": cache["length"] + 1}
+
+
+def partition_rules(cfg: LMConfig, *, tp_axis="model", fsdp_axis="data"):
+    fs = fsdp_axis if cfg.fsdp else None
+    rules = ssm.partition_rules(cfg, tp_axis=tp_axis, fsdp_axis=fsdp_axis)
+    shared = [
+        (r"shared/fuse/w", P(fs, tp_axis)),
+        (r"shared/w[qkv]/w", P(fs, tp_axis)),
+        (r"shared/wo/w", P(tp_axis, fs)),
+        (r"shared/mlp/w_(gate|up)/w", P(fs, tp_axis)),
+        (r"shared/mlp/w_down/w", P(tp_axis, fs)),
+        (r"shared/ln", P()),
+    ]
+    return shared + rules

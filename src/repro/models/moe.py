@@ -1,0 +1,351 @@
+"""Mixture-of-Experts transformer (phi3.5-moe, qwen2-moe).
+
+Top-k routing with GShard-style capacity dispatch (dense einsum formulation —
+the idiomatic TPU mapping: the dispatch einsum *is* the all-to-all once the
+token axis is data-sharded and the expert axis is model-sharded).  Shared
+experts (qwen2-moe: 4 always-active) run as a parallel dense branch — the
+qwen2-moe block therefore has two dependency-free branches (shared ∥ routed),
+which is exactly the structure the paper's Branch Parallelism exploits
+(DESIGN.md §5); ``branch_parallel`` can split them when a 'branch' axis is
+present.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.lmconfig import LMConfig
+from repro.models import dense
+from repro.nn import layers as nn
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN
+# ---------------------------------------------------------------------------
+
+def padded_experts(cfg: LMConfig) -> int:
+    """Expert-bank extent, padded for even expert-parallel sharding
+    (qwen2-moe: 60 routed experts -> 64 bank slots over EP=16)."""
+    return max(cfg.n_experts, cfg.expert_pad_to or cfg.n_experts)
+
+
+def moe_ffn_init(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 5)
+    d, e, f = cfg.d_model, padded_experts(cfg), cfg.moe_d_ff
+    def expert_bank(k, din, dout):
+        std = 1.0 / (din ** 0.5)
+        return std * jax.random.truncated_normal(k, -2, 2, (e, din, dout)).astype(jnp.float32)
+    p = {
+        # router is over the REAL experts; only the banks are padded for EP
+        "router": nn.dense_init(ks[0], d, cfg.n_experts, use_bias=False),
+        "w_gate": expert_bank(ks[1], d, f),
+        "w_up": expert_bank(ks[2], d, f),
+        "w_down": expert_bank(ks[3], f, d),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = nn.swiglu_init(
+            ks[4], d, cfg.shared_d_ff or cfg.n_shared_experts * f)
+    return p
+
+
+def router_topk(logits, k: int):
+    """Top-k gates renormalized over the selected experts."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def capacity_dispatch(idx, gates, n_experts: int, capacity: int):
+    """Build dispatch (T, E, C) one-hot and combine (T, E, C) weight tensors.
+
+    Position within an expert's buffer = running count of earlier tokens
+    routed to it (over the flattened (k, T) priority order: all rank-0
+    choices first — GShard's 'expert chooses its top tokens by arrival').
+    Overflowing tokens are dropped (their residual passes through).
+    """
+    t, k = idx.shape
+    flat_idx = idx.T.reshape(-1)                             # (k*T,) rank-major
+    onehot = jax.nn.one_hot(flat_idx, n_experts, dtype=jnp.int32)  # (kT, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                     # position per expert
+    pos = jnp.sum(pos * onehot, axis=-1)                     # (kT,)
+    keep = pos < capacity
+    pos_oh = jax.nn.one_hot(pos, capacity, dtype=jnp.float32) * keep[:, None]
+    disp = onehot.astype(jnp.float32)[:, :, None] * pos_oh[:, None, :]  # (kT,E,C)
+    disp = disp.reshape(k, t, n_experts, capacity)
+    combine = disp * gates.T.reshape(k, t, 1, 1)
+    return jnp.sum(disp, 0), jnp.sum(combine, 0)             # (T, E, C) each
+
+
+def moe_ffn_dense(p: Params, cfg: LMConfig, x):
+    """Dropless MoE for serving: evaluate all experts, weight by the sparse
+    top-k gates (zeros elsewhere).  Exact (no capacity drops); used by
+    prefill/decode where the token count is small and the step is
+    memory-bound on expert weights anyway."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = nn.dense(p["router"], xf)
+    gates, idx, _ = router_topk(logits, cfg.top_k)
+    e_pad = padded_experts(cfg)
+    w = jnp.zeros((xf.shape[0], e_pad), jnp.float32)
+    w = jax.vmap(lambda wr, i, g: wr.at[i].add(g))(w, idx, gates)
+    h = jnp.einsum("td,edf->tef", xf, p["w_gate"])
+    u = jnp.einsum("td,edf->tef", xf, p["w_up"])
+    he = jnp.einsum("tef,efd->ted", jax.nn.silu(h) * u, p["w_down"])
+    y = jnp.einsum("te,ted->td", w.astype(x.dtype), he).reshape(b, s, d)
+    if cfg.n_shared_experts:
+        y = y + nn.swiglu(p["shared"], x)
+    return y
+
+
+def sorted_dispatch(idx, gates, xf, n_experts: int, capacity: int):
+    """Argsort+scatter dispatch: same capacity semantics as
+    ``capacity_dispatch`` but O(T k D) data movement instead of the
+    O(T E C D) one-hot einsums (§Perf hillclimb 1).
+
+    Returns (xe (E, C, D), gather_idx (k, T), gather_pos (k, T), keep (k,T))
+    so the combine is a gather instead of a second giant einsum.
+    """
+    t, k = idx.shape
+    d = xf.shape[-1]
+    flat_e = idx.T.reshape(-1)                     # (kT,) rank-major priority
+    order = jnp.argsort(flat_e, stable=True)      # group by expert
+    sorted_e = flat_e[order]
+    # position within expert = rank in sorted order - start of expert segment
+    ranks = jnp.arange(t * k)
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    pos_sorted = ranks - seg_start[sorted_e]
+    keep_sorted = pos_sorted < capacity
+    token_sorted = order % t                       # originating token
+    slot_sorted = sorted_e * capacity + jnp.minimum(pos_sorted, capacity - 1)
+    # scatter tokens into the (E*C, D) buffer (dropped tokens overwrite a
+    # dummy slot guarded by keep)
+    buf = jnp.zeros((n_experts * capacity, d), xf.dtype)
+    src = jnp.where(keep_sorted[:, None], xf[token_sorted], 0)
+    xe = buf.at[slot_sorted].add(src).reshape(n_experts, capacity, d)
+    # invert the permutation for the combine gather
+    inv = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        jnp.arange(t * k, dtype=jnp.int32))
+    slot_by_tk = slot_sorted[inv].reshape(k, t)
+    keep_by_tk = keep_sorted[inv].reshape(k, t)
+    return xe, slot_by_tk, keep_by_tk
+
+
+def _expert_ffn(p, xe):
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["w_down"])
+
+
+def moe_ffn(p: Params, cfg: LMConfig, x, *, return_aux=False, constrain=None):
+    """x: (B, S, D). Returns MoE output (+ router aux loss)."""
+    cst = constrain or (lambda t, spec=None: t)
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = nn.dense(p["router"], xf)                       # (T, E)
+    gates, idx, probs = router_topk(logits, cfg.top_k)
+    capacity = int(cfg.capacity_factor * cfg.top_k * t / cfg.n_experts + 1)
+    e_pad = padded_experts(cfg)
+    if cfg.moe_dispatch == "sorted":
+        xe, slot_by_tk, keep_by_tk = sorted_dispatch(idx, gates, xf, e_pad,
+                                                     capacity)
+        # NOTE (§Perf H1 iteration 2, refuted): forcing xe/he to expert-
+        # parallel sharding here TRIPLED collective bytes (GSPMD inserted
+        # a2a for the scatter AND the gather-back); letting the partitioner
+        # choose keeps the sorted path 3.7x ahead of the one-hot baseline.
+        he = _expert_ffn(p, xe).reshape(e_pad * capacity, d)
+        picked = he[slot_by_tk]                              # (k, T, D)
+        w = (gates.T * keep_by_tk).astype(x.dtype)           # (k, T)
+        y = jnp.einsum("kt,ktd->td", w, picked)
+    else:  # 'einsum': GShard one-hot dispatch (baseline)
+        disp, combine = capacity_dispatch(idx, gates, e_pad, capacity)
+        # dispatch: (T,E,C) x (T,D) -> (E,C,D); T->data, E->model = a2a
+        xe = jnp.einsum("tec,td->ecd", disp.astype(x.dtype), xf)
+        he = _expert_ffn(p, xe)
+        y = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), he)
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        y = y + nn.swiglu(p["shared"], x)
+    if not return_aux:
+        return y
+    # Switch/GShard load-balancing aux: E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                             # mean router prob
+    fe = jnp.mean(jax.nn.one_hot(idx[:, 0], cfg.n_experts), axis=0)
+    aux = cfg.n_experts * jnp.sum(me * fe)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Full model: dense attention + MoE FFN layers
+# ---------------------------------------------------------------------------
+
+def layer_init(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 5)
+    d, hd = cfg.d_model, cfg.d_head
+    return {
+        "ln1": nn.rmsnorm_init(d),
+        "wq": nn.dense_init(ks[0], d, cfg.n_head * hd, use_bias=cfg.qkv_bias),
+        "wk": nn.dense_init(ks[1], d, cfg.n_kv_head * hd, use_bias=cfg.qkv_bias),
+        "wv": nn.dense_init(ks[2], d, cfg.n_kv_head * hd, use_bias=cfg.qkv_bias),
+        "wo": nn.dense_init(ks[3], cfg.n_head * hd, d, use_bias=False),
+        "ln2": nn.rmsnorm_init(d),
+        "moe": moe_ffn_init(ks[4], cfg),
+    }
+
+
+def init_params(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layer)
+    layers = (jax.vmap(lambda k: layer_init(k, cfg))(layer_keys)
+              if cfg.scan_layers else [layer_init(k, cfg) for k in layer_keys])
+    return {
+        "embed": nn.embedding_init(ks[1], cfg.vocab, cfg.d_model),
+        "layers": layers,
+        "ln_f": nn.rmsnorm_init(cfg.d_model),
+        "lm_head": nn.dense_init(ks[2], cfg.d_model, cfg.vocab, use_bias=False),
+    }
+
+
+def _layer(lp, cfg, x, positions, kv_cache=None, cache_lengths=None,
+           constrain=None):
+    att, kv = dense.attention_block(lp, cfg, x, positions, kv_cache=kv_cache,
+                                    cache_lengths=cache_lengths)
+    x = x + att
+    y, aux = moe_ffn(lp["moe"], cfg, nn.rmsnorm(lp["ln2"], x), return_aux=True,
+                     constrain=constrain)
+    return (x + y).astype(att.dtype), kv, aux
+
+
+def forward(params, cfg: LMConfig, tokens, *, constrain=None,
+            dropless: bool = False):
+    """Training path: capacity routing (+aux). ``dropless=True`` = inference
+    semantics (exact top-k, no capacity drops) matching prefill/decode."""
+    params = nn.BF16.cast(params)
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cst = constrain or (lambda t: t)
+
+    def one(carry, lp):
+        x, aux = carry
+        if dropless:
+            att, _ = dense.attention_block(lp, cfg, x, positions)
+            x = x + att
+            x = (x + moe_ffn_dense(lp["moe"], cfg,
+                                   nn.rmsnorm(lp["ln2"], x))).astype(att.dtype)
+            a = jnp.zeros((), jnp.float32)
+        else:
+            x, _, a = _layer(lp, cfg, x, positions, constrain=constrain)
+        return (cst(x), aux + a), None
+
+    if cfg.remat == "layer":
+        one = jax.checkpoint(one)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(one, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for lp in params["layers"]:
+            (x, aux), _ = one((x, aux), lp)
+    x = nn.rmsnorm(params["ln_f"], x)
+    return nn.dense(params["lm_head"], x), aux / cfg.n_layer
+
+
+def loss(params, cfg: LMConfig, batch, *, constrain=None):
+    logits, aux = forward(params, cfg, batch["tokens"], constrain=constrain)
+    ce = dense.cross_entropy(logits, batch["labels"], mask=batch.get("mask"))
+    return ce + cfg.router_aux_weight * aux
+
+
+# serving: same cache layout as dense
+init_cache = dense.init_cache
+
+
+def prefill(params, cfg: LMConfig, tokens, cache):
+    params = nn.BF16.cast(params)
+    b, s = tokens.shape
+    x = params["embed"]["table"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def one(x, xs):
+        lp, kc, vc = xs
+        att, (k, v) = dense.attention_block(lp, cfg, x, positions)
+        x = x + att
+        x = x + moe_ffn_dense(lp["moe"], cfg, nn.rmsnorm(lp["ln2"], x))
+        x = x.astype(att.dtype)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), 0, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), 0, 1)
+        return x, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (kc, vc) = jax.lax.scan(one, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks_, vs_ = [], []
+        for i, lp in enumerate(params["layers"]):
+            x, (kc, vc) = one(x, (lp, cache["k"][i], cache["v"][i]))
+            ks_.append(kc); vs_.append(vc)
+        kc, vc = jnp.stack(ks_), jnp.stack(vs_)
+    x = nn.rmsnorm(params["ln_f"], x)
+    return nn.dense(params["lm_head"], x[:, -1:]), {
+        "k": kc, "v": vc, "length": jnp.full((b,), s, jnp.int32)}
+
+
+def decode_step(params, cfg: LMConfig, tokens1, cache):
+    params = nn.BF16.cast(params)
+    b = tokens1.shape[0]
+    x = params["embed"]["table"][tokens1]
+    positions = cache["length"][:, None]
+
+    def one(x, xs):
+        lp, kc, vc = xs
+        from repro.nn.rope import apply_rope
+        from repro.nn.attention import decode_attention
+        h = nn.rmsnorm(lp["ln1"], x)
+        q = nn.dense(lp["wq"], h).reshape(b, 1, cfg.n_head, cfg.d_head)
+        k = nn.dense(lp["wk"], h).reshape(b, 1, cfg.n_kv_head, cfg.d_head)
+        v = nn.dense(lp["wv"], h).reshape(b, 1, cfg.n_kv_head, cfg.d_head)
+        q = apply_rope(q, positions, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, theta=cfg.rope_theta)
+        kc = dense.write_kv_cache(kc, k, cache["length"],
+                                  uniform=cfg.uniform_decode)
+        vc = dense.write_kv_cache(vc, v, cache["length"],
+                                  uniform=cfg.uniform_decode)
+        o = decode_attention(q, kc, vc, lengths=cache["length"] + 1)
+        x = x + nn.dense(lp["wo"], o.reshape(b, 1, cfg.n_head * cfg.d_head))
+        y = moe_ffn_dense(lp["moe"], cfg, nn.rmsnorm(lp["ln2"], x))
+        return (x + y).astype(o.dtype), (kc, vc)
+
+    if cfg.scan_layers:
+        x, (kc, vc) = jax.lax.scan(one, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks_, vs_ = [], []
+        for i, lp in enumerate(params["layers"]):
+            x, (kc, vc) = one(x, (lp, cache["k"][i], cache["v"][i]))
+            ks_.append(kc); vs_.append(vc)
+        kc, vc = jnp.stack(ks_), jnp.stack(vs_)
+    x = nn.rmsnorm(params["ln_f"], x)
+    return nn.dense(params["lm_head"], x), {
+        "k": kc, "v": vc, "length": cache["length"] + 1}
+
+
+def partition_rules(cfg: LMConfig, *, tp_axis="model", fsdp_axis="data"):
+    fs = fsdp_axis if cfg.fsdp else None
+    lay = ((lambda *sp: P(None, *sp)) if cfg.scan_layers else
+           (lambda *sp: P(*sp)))
+    return [
+        (r"embed/table", P(tp_axis, fs)),
+        (r"lm_head/w", P(fs, tp_axis)),
+        (r"w[qkv]/w", lay(fs, tp_axis)),
+        (r"w[qkv]/b", lay(tp_axis)),
+        (r"wo/w", lay(tp_axis, fs)),
+        # expert parallelism: expert banks sharded over the expert axis
+        (r"moe/w_(gate|up|down)", lay(tp_axis, fs, None)),
+        (r"moe/router/w", lay(fs, None)),
+        (r"moe/shared/w_(gate|up)/w", lay(fs, tp_axis)),
+        (r"moe/shared/w_down/w", lay(tp_axis, fs)),
+        (r"ln", P()),
+    ]

@@ -1,0 +1,357 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Scalar-decay per head: S_t = exp(dt_t A_h) S_{t-1} + dt_t B_t x_t^T;
+y_t = C_t S_t + D_h x_t.  Training uses the chunked SSD form (intra-chunk
+quadratic term + inter-chunk state scan) — O(T Q) memory, matmul-dominated,
+MXU-friendly.  ``ssd_reference`` is the naive recurrence oracle.
+
+Projections are kept separate (wz/wx/wB/wC/wdt) rather than fused, so tensor
+parallelism is clean: heads shard over 'model', B/C (group-shared) replicate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.lmconfig import LMConfig
+from repro.nn import layers as nn
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x, dt, A, B, C, D):
+    """Naive recurrence. x (T,H,P), dt (T,H), A (H,), B/C (T,N), D (H,)."""
+    t, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A)                        # (H,)
+        S = S * decay[:, None, None] + jnp.einsum(
+            "n,hp->hnp", Bt, xt * dtt[:, None])
+        y = jnp.einsum("n,hnp->hp", Ct, S)
+        return S, y
+
+    S0 = jnp.zeros((h, n, p), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, (x.astype(jnp.float32),
+                                    dt.astype(jnp.float32),
+                                    B.astype(jnp.float32),
+                                    C.astype(jnp.float32)))
+    return ys + x.astype(jnp.float32) * D[None, :, None]
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int):
+    """Chunked SSD. Same signature/semantics as ssd_reference (fp32 out)."""
+    t0, h, p = x.shape
+    n = B.shape[-1]
+    t = t0
+    if t % chunk != 0:
+        # pad with dt=0 steps: decay exp(0)=1, contribution dt*x=0 — inert
+        pad = chunk - t % chunk
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, pad), (0, 0)))
+        t = t + pad
+    nc = t // chunk
+    xf = x.astype(jnp.float32).reshape(nc, chunk, h, p)
+    dtc = dt.astype(jnp.float32).reshape(nc, chunk, h)
+    Bc = B.astype(jnp.float32).reshape(nc, chunk, n)
+    Cc = C.astype(jnp.float32).reshape(nc, chunk, n)
+
+    a = dtc * A                                          # (nc, Q, H) log-decay
+    a_cum = jnp.cumsum(a, axis=1)                        # inclusive cumsum
+    xbar = xf * dtc[..., None]                           # dt-weighted input
+
+    # intra-chunk: Y[i] = sum_{j<=i} exp(acum_i - acum_j) (C_i.B_j) xbar_j
+    scores = jnp.einsum("cin,cjn->cij", Cc, Bc)          # (nc, Q, Q)
+    logdec = a_cum[:, :, None, :] - a_cum[:, None, :, :] # (nc, i, j, H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, :, :, None], jnp.exp(logdec), 0.0)
+    att = scores[..., None] * decay                      # (nc, i, j, H)
+    y_intra = jnp.einsum("cijh,cjhp->cihp", att, xbar)
+
+    # chunk summary states: S_c = sum_j exp(acum_last - acum_j) B_j xbar_j^T
+    last = a_cum[:, -1:, :]                              # (nc, 1, H)
+    w = jnp.exp(last - a_cum)                            # (nc, Q, H)
+    S_chunk = jnp.einsum("cjn,cjh,cjhp->chnp", Bc, w, xbar)
+
+    # inter-chunk scan: S_{c} = S_{c-1} * exp(acum_last_c) + S_chunk_c
+    chunk_decay = jnp.exp(a_cum[:, -1, :])               # (nc, H)
+
+    def scan_step(S, inp):
+        dec, Sc = inp
+        S_new = S * dec[:, None, None] + Sc
+        return S_new, S
+    S0 = jnp.zeros((h, n, p), jnp.float32)
+    _, S_prev = jax.lax.scan(scan_step, S0, (chunk_decay, S_chunk))
+
+    # inter contribution: y[i] += C_i (exp(acum_i) * S_prev)
+    y_inter = jnp.einsum("cin,cih,chnp->cihp", Cc, jnp.exp(a_cum), S_prev)
+    y = (y_intra + y_inter).reshape(t, h, p)[:t0]
+    return y + x[:t0].astype(jnp.float32) * D[None, :, None]
+
+
+def ssd_decode_step(S, x1, dt1, A, B1, C1, D):
+    """Single-token state update. S (H,N,P) fp32; returns (S', y (H,P))."""
+    decay = jnp.exp(dt1.astype(jnp.float32) * A)
+    S = S * decay[:, None, None] + jnp.einsum(
+        "n,hp->hnp", B1.astype(jnp.float32),
+        x1.astype(jnp.float32) * dt1.astype(jnp.float32)[:, None])
+    y = jnp.einsum("n,hnp->hp", C1.astype(jnp.float32), S)
+    return S, y + x1.astype(jnp.float32) * D[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 7)
+    d, di, h, n = cfg.d_model, cfg.d_inner, cfg.n_ssm_heads, cfg.ssm_state
+    return {
+        "ln": nn.rmsnorm_init(d),
+        "wz": nn.dense_init(ks[0], d, di, use_bias=False),
+        "wx": nn.dense_init(ks[1], d, di, use_bias=False),
+        "wB": nn.dense_init(ks[2], d, n, use_bias=False),
+        "wC": nn.dense_init(ks[3], d, n, use_bias=False),
+        "wdt": nn.dense_init(ks[4], d, h, use_bias=False),
+        "dt_bias": jnp.log(jnp.exp(
+            jnp.linspace(0.001, 0.1, h).astype(jnp.float32)) - 1.0),  # softplus^-1
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_w": 0.1 * jax.random.normal(ks[5], (cfg.ssm_conv, di + 2 * n)),
+        "gate_ln": nn.rmsnorm_init(di),
+        "out": nn.dense_init(ks[6], di, d, use_bias=False),
+    }
+
+
+def _causal_conv(u, w, *, state=None):
+    """Depthwise causal conv1d. u (T, C), w (K, C). state (K-1, C) history."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((k - 1, u.shape[-1]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=0)              # (T+K-1, C)
+    out = sum(ext[i:i + u.shape[0]] * w[i] for i in range(k))
+    new_state = ext[-(k - 1):] if k > 1 else jnp.zeros((0, u.shape[-1]), u.dtype)
+    return out, new_state
+
+
+def block_apply(p: Params, cfg: LMConfig, x, *, chunked=True):
+    """x (T, D) -> (T, D) (single sequence; vmapped over batch)."""
+    t, d = x.shape
+    h_ = nn.rmsnorm(p["ln"], x)
+    z = nn.dense(p["wz"], h_)
+    xin = nn.dense(p["wx"], h_)
+    Bp = nn.dense(p["wB"], h_)
+    Cp = nn.dense(p["wC"], h_)
+    dt = jax.nn.softplus(nn.dense(p["wdt"], h_).astype(jnp.float32)
+                         + p["dt_bias"])
+    xbc = jnp.concatenate([xin, Bp, Cp], axis=-1)
+    xbc, _ = _causal_conv(xbc, p["conv_w"].astype(xbc.dtype))
+    xbc = jax.nn.silu(xbc)
+    di, n = cfg.d_inner, cfg.ssm_state
+    xin, Bp, Cp = xbc[:, :di], xbc[:, di:di + n], xbc[:, di + n:]
+    xh = xin.reshape(t, cfg.n_ssm_heads, cfg.ssm_head_dim)
+    A = -jnp.exp(p["A_log"])
+    fn = ssd_chunked if chunked else ssd_reference
+    kw = {"chunk": min(cfg.ssm_chunk, t)} if chunked else {}
+    y = fn(xh, dt, A, Bp, Cp, p["D"], **kw)              # (T, H, P) fp32
+    y = y.reshape(t, di).astype(x.dtype)
+    y = nn.rmsnorm(p["gate_ln"], y * jax.nn.silu(z))
+    return nn.dense(p["out"], y)
+
+
+def block_decode(p: Params, cfg: LMConfig, x1, state):
+    """x1 (D,), state {'conv': (K-1, C), 'S': (H, N, P)} -> (y (D,), state)."""
+    h_ = nn.rmsnorm(p["ln"], x1[None])
+    z = nn.dense(p["wz"], h_)
+    xin = nn.dense(p["wx"], h_)
+    Bp = nn.dense(p["wB"], h_)
+    Cp = nn.dense(p["wC"], h_)
+    dt = jax.nn.softplus(nn.dense(p["wdt"], h_).astype(jnp.float32)
+                         + p["dt_bias"])[0]
+    xbc = jnp.concatenate([xin, Bp, Cp], axis=-1)        # (1, C)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"].astype(xbc.dtype),
+                                   state=state["conv"])
+    xbc = jax.nn.silu(xbc)[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    xin, Bp1, Cp1 = xbc[:di], xbc[di:di + n], xbc[di + n:]
+    xh = xin.reshape(cfg.n_ssm_heads, cfg.ssm_head_dim)
+    A = -jnp.exp(p["A_log"])
+    S, y = ssd_decode_step(state["S"], xh, dt, A, Bp1, Cp1, p["D"])
+    y = y.reshape(di).astype(x1.dtype)
+    y = nn.rmsnorm(p["gate_ln"], (y * jax.nn.silu(z[0]))[None])[0]
+    return nn.dense(p["out"], y), {"conv": conv_state, "S": S}
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layer)
+    layers = (jax.vmap(lambda k: block_init(k, cfg))(layer_keys)
+              if cfg.scan_layers else [block_init(k, cfg) for k in layer_keys])
+    return {
+        "embed": nn.embedding_init(ks[1], cfg.vocab, cfg.d_model),
+        "layers": layers,
+        "ln_f": nn.rmsnorm_init(cfg.d_model),
+        "lm_head": nn.dense_init(ks[2], cfg.d_model, cfg.vocab, use_bias=False),
+    }
+
+
+def forward(params, cfg: LMConfig, tokens, *, constrain=None, chunked=True):
+    params = nn.BF16.cast(params)
+    x = params["embed"]["table"][tokens]                 # (B, T, D)
+    cst = constrain or (lambda t: t)
+    apply_b = jax.vmap(lambda lp, xx: block_apply(lp, cfg, xx, chunked=chunked),
+                       in_axes=(None, 0))
+
+    def one(x, lp):
+        return cst((x + apply_b(lp, x)).astype(x.dtype)), None
+
+    if cfg.remat == "layer":
+        one = jax.checkpoint(one)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(one, x, params["layers"])
+    else:
+        for lp in params["layers"]:
+            x, _ = one(x, lp)
+    x = nn.rmsnorm(params["ln_f"], x)
+    return nn.dense(params["lm_head"], x)
+
+
+def loss(params, cfg: LMConfig, batch, *, constrain=None):
+    from repro.models.dense import cross_entropy
+    logits = forward(params, cfg, batch["tokens"], constrain=constrain)
+    return cross_entropy(logits, batch["labels"], mask=batch.get("mask"))
+
+
+# serving: recurrent state instead of a KV cache — O(1) per decode step,
+# which is why mamba2 runs the long_500k cell (DESIGN.md §5)
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    di, n = cfg.d_inner, cfg.ssm_state
+    c = di + 2 * n
+    return {
+        "conv": jnp.zeros((cfg.n_layer, batch, cfg.ssm_conv - 1, c), dtype),
+        "S": jnp.zeros((cfg.n_layer, batch, cfg.n_ssm_heads, n,
+                        cfg.ssm_head_dim), jnp.float32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params, cfg: LMConfig, tokens, cache):
+    """Run the chunked form over the prompt, then rebuild the final state by
+    a short reference scan over the last conv window (states from chunked
+    path are materialized directly)."""
+    params = nn.BF16.cast(params)
+    b, t = tokens.shape
+    x = params["embed"]["table"][tokens]
+
+    def per_layer(lp, xx):
+        # forward output plus final (conv, S) state, per sequence
+        def seq_fn(xs):
+            h_ = nn.rmsnorm(lp["ln"], xs)
+            z = nn.dense(lp["wz"], h_)
+            xin = nn.dense(lp["wx"], h_)
+            Bp = nn.dense(lp["wB"], h_)
+            Cp = nn.dense(lp["wC"], h_)
+            dt = jax.nn.softplus(nn.dense(lp["wdt"], h_).astype(jnp.float32)
+                                 + lp["dt_bias"])
+            xbc = jnp.concatenate([xin, Bp, Cp], axis=-1)
+            conv_state = xbc[-(cfg.ssm_conv - 1):]
+            xbc, _ = _causal_conv(xbc, lp["conv_w"].astype(xbc.dtype))
+            xbc = jax.nn.silu(xbc)
+            di, n = cfg.d_inner, cfg.ssm_state
+            xin2, Bp2, Cp2 = xbc[:, :di], xbc[:, di:di + n], xbc[:, di + n:]
+            xh = xin2.reshape(t, cfg.n_ssm_heads, cfg.ssm_head_dim)
+            A = -jnp.exp(lp["A_log"])
+
+            def step(S, inp):
+                xt, dtt, Bt, _ = inp
+                decay = jnp.exp(dtt * A)
+                S = S * decay[:, None, None] + jnp.einsum(
+                    "n,hp->hnp", Bt, xt * dtt[:, None])
+                return S, None
+            S0 = jnp.zeros((cfg.n_ssm_heads, cfg.ssm_state,
+                            cfg.ssm_head_dim), jnp.float32)
+            S, _ = jax.lax.scan(step, S0, (xh.astype(jnp.float32), dt,
+                                           Bp2.astype(jnp.float32),
+                                           Cp2.astype(jnp.float32)))
+            y = ssd_chunked(xh, dt, A, Bp2, Cp2, lp["D"],
+                            chunk=min(cfg.ssm_chunk, t))
+            y = y.reshape(t, di).astype(xs.dtype)
+            y = nn.rmsnorm(lp["gate_ln"], y * jax.nn.silu(z))
+            return nn.dense(lp["out"], y), (conv_state, S)
+        return jax.vmap(seq_fn)(xx)
+
+    def one(x, xs):
+        lp, _, _ = xs
+        y, (conv_s, S) = per_layer(lp, x)
+        return (x + y).astype(x.dtype), (conv_s, S)
+
+    if cfg.scan_layers:
+        x, (conv_s, S) = jax.lax.scan(
+            one, x, (params["layers"], cache["conv"], cache["S"]))
+    else:
+        cs, ss = [], []
+        for i, lp in enumerate(params["layers"]):
+            x, (c_, s_) = one(x, (lp, None, None))
+            cs.append(c_); ss.append(s_)
+        conv_s, S = jnp.stack(cs), jnp.stack(ss)
+    x = nn.rmsnorm(params["ln_f"], x)
+    logits = nn.dense(params["lm_head"], x[:, -1:])
+    return logits, {"conv": conv_s.astype(cache["conv"].dtype), "S": S,
+                    "length": jnp.full((b,), t, jnp.int32)}
+
+
+def decode_step(params, cfg: LMConfig, tokens1, cache):
+    params = nn.BF16.cast(params)
+    b = tokens1.shape[0]
+    x = params["embed"]["table"][tokens1][:, 0]          # (B, D)
+
+    def one(x, xs):
+        lp, conv_s, S = xs
+        y, st = jax.vmap(lambda xx, c, s: block_decode(
+            lp, cfg, xx, {"conv": c, "S": s}))(x, conv_s, S)
+        return (x + y).astype(x.dtype), (st["conv"], st["S"])
+
+    if cfg.scan_layers:
+        x, (conv_s, S) = jax.lax.scan(
+            one, x, (params["layers"], cache["conv"], cache["S"]))
+    else:
+        cs, ss = [], []
+        for i, lp in enumerate(params["layers"]):
+            x, (c_, s_) = one(x, (lp, cache["conv"][i], cache["S"][i]))
+            cs.append(c_); ss.append(s_)
+        conv_s, S = jnp.stack(cs), jnp.stack(ss)
+    x = nn.rmsnorm(params["ln_f"], x)
+    logits = nn.dense(params["lm_head"], x[:, None])
+    return logits, {"conv": conv_s.astype(cache["conv"].dtype), "S": S,
+                    "length": cache["length"] + 1}
+
+
+def partition_rules(cfg: LMConfig, *, tp_axis="model", fsdp_axis="data"):
+    fs = fsdp_axis if cfg.fsdp else None
+    lay = ((lambda *sp: P(None, *sp)) if cfg.scan_layers else
+           (lambda *sp: P(*sp)))
+    return [
+        (r"embed/table", P(tp_axis, fs)),
+        (r"lm_head/w", P(fs, tp_axis)),
+        (r"w[zx]/w", lay(fs, tp_axis)),       # heads shard
+        (r"w[BC]/w", lay(fs, None)),          # group-shared: replicate
+        (r"wdt/w", lay(fs, tp_axis)),
+        (r"(dt_bias|A_log|D)$", lay(tp_axis)),
+        (r"conv_w", lay(None, None)),
+        (r"out/w", lay(tp_axis, fs)),
+        (r"ln", P()),
+    ]

@@ -1,0 +1,101 @@
+"""InternVL2-style VLM (arXiv:2404.16821): InternLM2 dense LM backbone with a
+ViT frontend STUB per the assignment — ``input_specs`` provides precomputed
+InternViT patch features (B, n_patches, frontend_dim); a 2-layer MLP
+projector maps them into the LM embedding space and they are prepended to the
+token sequence (labels masked over image positions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.lmconfig import LMConfig
+from repro.models import dense
+from repro.nn import layers as nn
+
+Params = dict
+
+
+def init_params(key, cfg: LMConfig) -> Params:
+    ks = nn.split_keys(key, 3)
+    p = dense.init_params(ks[0], cfg)
+    p["projector"] = {
+        "ln": nn.layernorm_init(cfg.frontend_dim),
+        "w1": nn.dense_init(ks[1], cfg.frontend_dim, cfg.d_model),
+        "w2": nn.dense_init(ks[2], cfg.d_model, cfg.d_model),
+    }
+    return p
+
+
+def project_patches(params, patches):
+    h = nn.layernorm(params["projector"]["ln"], patches)
+    h = jax.nn.gelu(nn.dense(params["projector"]["w1"], h))
+    return nn.dense(params["projector"]["w2"], h)
+
+
+def forward(params, cfg: LMConfig, batch, *, constrain=None):
+    """batch: patches (B, P, frontend_dim) + tokens (B, S)."""
+    params = nn.BF16.cast(params)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    img = project_patches(params, batch["patches"].astype(jnp.bfloat16))
+    txt = params["embed"]["table"][tokens]
+    x = jnp.concatenate([img, txt], axis=1)              # (B, P+S, D)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), (b, x.shape[1]))
+    x = dense.backbone(params, cfg, x, positions, constrain=constrain)
+    return dense.logits_fn(params, cfg, x[:, img.shape[1]:])  # text positions
+
+
+def loss(params, cfg: LMConfig, batch, *, constrain=None):
+    logits = forward(params, cfg, batch, constrain=constrain)
+    return dense.cross_entropy(logits, batch["labels"], mask=batch.get("mask"))
+
+
+# serving: prefill consumes patches + prompt; decode is pure dense decode
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return dense.init_cache(cfg, batch, max_len, dtype)
+
+
+def prefill(params, cfg: LMConfig, batch, cache):
+    params = nn.BF16.cast(params)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    img = project_patches(params, batch["patches"].astype(jnp.bfloat16))
+    txt = params["embed"]["table"][tokens]
+    x = jnp.concatenate([img, txt], axis=1)
+    npos = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(npos), (b, npos))
+
+    def one(x, xs):
+        lp, kc, vc = xs
+        x, (k, v) = dense.layer_apply(lp, cfg, x, positions, causal=True)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), 0, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), 0, 1)
+        return x, (kc, vc)
+
+    if cfg.scan_layers:
+        x, (kc, vc) = jax.lax.scan(one, x, (params["layers"], cache["k"],
+                                            cache["v"]))
+    else:
+        ks_, vs_ = [], []
+        for i, lp in enumerate(params["layers"]):
+            x, (kc, vc) = one(x, (lp, cache["k"][i], cache["v"][i]))
+            ks_.append(kc); vs_.append(vc)
+        kc, vc = jnp.stack(ks_), jnp.stack(vs_)
+    x = nn.rmsnorm(params["ln_f"], x)
+    logits = dense.logits_fn(params, cfg, x[:, -1:])
+    return logits, {"k": kc, "v": vc,
+                    "length": jnp.full((b,), npos, jnp.int32)}
+
+
+decode_step = dense.decode_step
+
+
+def partition_rules(cfg: LMConfig, *, tp_axis="model", fsdp_axis="data"):
+    fs = fsdp_axis if cfg.fsdp else None
+    return [
+        (r"projector/w[12]/w", P(fs, tp_axis)),
+        (r"projector/w[12]/b", P(tp_axis)),
+        (r"projector/ln", P()),
+    ] + dense.partition_rules(cfg, tp_axis=tp_axis, fsdp_axis=fsdp_axis)

@@ -1,0 +1,16 @@
+"""Neural-net substrate: pure-pytree modules, layers, attention, partitioning."""
+from repro.nn.layers import (  # noqa: F401
+    Policy,
+    dense_init,
+    dense,
+    layernorm_init,
+    layernorm,
+    rmsnorm_init,
+    rmsnorm,
+    embedding_init,
+    swiglu_init,
+    swiglu,
+    gelu_mlp_init,
+    gelu_mlp,
+)
+from repro.nn.partition import make_param_specs, tree_paths  # noqa: F401

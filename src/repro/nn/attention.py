@@ -1,0 +1,163 @@
+"""Attention: naive reference and memory-efficient chunked (flash-style) paths.
+
+Pure-JAX implementations used by every model; the Pallas TPU kernels in
+``repro.kernels`` are drop-in replacements for the hot paths (selected via
+``impl='pallas'``; the chunked XLA path is what the multi-pod dry-run lowers,
+since Pallas TPU kernels cannot compile on the CPU dry-run backend).
+
+Layout conventions: ``q``: (..., S, H, D); ``k``/``v``: (..., T, KV, D) with
+``H = KV * G`` (grouped-query attention).  Masks/bias broadcast to
+(..., H, S, T).  Softmax statistics in fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _expand_gqa(q: jnp.ndarray, kv_heads: int) -> jnp.ndarray:
+    """(..., S, H, D) -> (..., S, KV, G, D)."""
+    *lead, s, h, d = q.shape
+    assert h % kv_heads == 0, f"{h} q heads not divisible by {kv_heads} kv heads"
+    return q.reshape(*lead, s, kv_heads, h // kv_heads, d)
+
+
+def attention_reference(q, k, v, *, causal: bool = False,
+                        bias: Optional[jnp.ndarray] = None,
+                        mask: Optional[jnp.ndarray] = None,
+                        q_offset: int = 0,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """Naive O(S*T) attention. Oracle for the chunked path and Pallas kernels."""
+    *_, s, h, d = q.shape
+    t, kv = k.shape[-3], k.shape[-2]
+    scale = scale if scale is not None else d ** -0.5
+    qg = _expand_gqa(q, kv)  # (..., S, KV, G, D)
+    logits = jnp.einsum("...skgd,...tkd->...kgst", qg, k).astype(jnp.float32) * scale
+    lead = logits.shape[:-4]
+    logits = logits.reshape(*lead, h, s, t)
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask, logits, NEG_INF)
+    if causal:
+        qpos = jnp.arange(s) + q_offset
+        cmask = qpos[:, None] >= jnp.arange(t)[None, :]
+        logits = jnp.where(cmask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = probs.reshape(*lead, kv, h // kv, s, t).astype(v.dtype)
+    out = jnp.einsum("...kgst,...tkd->...skgd", probs, v)
+    return out.reshape(*lead, s, h, d)
+
+
+def attention_chunked(q, k, v, *, causal: bool = False,
+                      bias: Optional[jnp.ndarray] = None,
+                      mask: Optional[jnp.ndarray] = None,
+                      q_offset: int = 0,
+                      scale: Optional[float] = None,
+                      chunk_size: int = 1024) -> jnp.ndarray:
+    """Flash-style online-softmax attention, scanning KV chunks.
+
+    Never materializes the (S, T) score matrix; peak temp is O(S * chunk).
+    Matches :func:`attention_reference` to fp32-accumulation tolerance.
+    ``mask`` may be 1-D (T,) key-validity or broadcastable to (..., H, S, T);
+    large dense masks defeat the memory saving — prefer ``causal``/1-D forms.
+    """
+    *lead, s, h, d = q.shape
+    t0, kv = k.shape[-3], k.shape[-2]
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    chunk_size = min(chunk_size, t0)
+    t = t0
+    if t % chunk_size != 0:
+        pad = chunk_size - t % chunk_size
+        k = jnp.pad(k, [(0, 0)] * (k.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+        t = t + pad
+    n_chunks = t // chunk_size
+    key_valid = jnp.arange(t) < t0  # (T,)
+    if mask is not None and mask.ndim == 1:
+        key_valid = key_valid & jnp.pad(mask, (0, t - t0), constant_values=False)
+        mask = None
+
+    qg = (_expand_gqa(q, kv) * jnp.asarray(scale, q.dtype))  # (..., S, KV, G, D)
+
+    def chunked_axis(x, axis):  # split axis into (n_chunks, chunk) & move front
+        x = x.reshape(*x.shape[:axis], n_chunks, chunk_size, *x.shape[axis + 1:])
+        return jnp.moveaxis(x, axis, 0)
+
+    kc = chunked_axis(k, k.ndim - 3)
+    vc = chunked_axis(v, v.ndim - 3)
+    vk = key_valid.reshape(n_chunks, chunk_size)
+    xs = {"idx": jnp.arange(n_chunks), "k": kc, "v": vc, "kv_valid": vk}
+    if bias is not None:
+        b = jnp.broadcast_to(bias, (*lead, h, s, t0)).astype(jnp.float32)
+        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, t - t0)])
+        xs["bias"] = chunked_axis(b, b.ndim - 1)
+    if mask is not None:
+        mfull = jnp.broadcast_to(mask, (*lead, h, s, t0))
+        mfull = jnp.pad(mfull, [(0, 0)] * (mfull.ndim - 1) + [(0, t - t0)],
+                        constant_values=False)
+        xs["mask"] = chunked_axis(mfull, mfull.ndim - 1)
+
+    qpos = jnp.arange(s) + q_offset
+
+    def body(carry, x):
+        m, l, acc = carry
+        logits = jnp.einsum("...skgd,...tkd->...kgst", qg, x["k"]).astype(jnp.float32)
+        logits = logits.reshape(*lead, h, s, chunk_size)
+        if "bias" in x:
+            logits = logits + x["bias"]
+        valid = x["kv_valid"]  # (chunk,)
+        if causal:
+            kpos = x["idx"] * chunk_size + jnp.arange(chunk_size)
+            valid = valid & (qpos[:, None] >= kpos[None, :])  # (s, chunk)
+        if "mask" in x:
+            valid = valid & x["mask"]
+        logits = jnp.where(valid, logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        p = jnp.where(jnp.broadcast_to(valid, p.shape), p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pg = p.reshape(*lead, kv, g, s, chunk_size).astype(x["v"].dtype)
+        upd = jnp.einsum("...kgst,...tkd->...kgsd", pg, x["v"]).astype(jnp.float32)
+        acc_new = acc * corr.reshape(*lead, kv, g, s, 1) + upd
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((*lead, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((*lead, h, s), jnp.float32)
+    acc0 = jnp.zeros((*lead, kv, g, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), xs)
+    out = acc / jnp.maximum(l.reshape(*lead, kv, g, s)[..., None], 1e-30)
+    out = jnp.moveaxis(out, -2, -4)               # (..., S, KV, G, D)
+    return out.reshape(*lead, s, h, d).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl: str = "chunked", chunk_size: int = 1024, **kw):
+    """Dispatch: 'reference' | 'chunked' | 'pallas' (TPU kernel)."""
+    if impl == "reference":
+        return attention_reference(q, k, v, **kw)
+    if impl == "chunked":
+        return attention_chunked(q, k, v, chunk_size=chunk_size, **kw)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, **kw)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def decode_attention(q1, k_cache, v_cache, *, lengths=None,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token decode: q1 (..., 1, H, D) vs (..., T, KV, D) cache.
+
+    ``lengths`` (...,) marks how many cache slots are filled per sequence.
+    """
+    mask = None
+    if lengths is not None:
+        t = k_cache.shape[-3]
+        mask = jnp.arange(t) < lengths[..., None]      # (..., T)
+        mask = mask[..., None, None, :]                # (..., 1, 1, T) over (H, S)
+    return attention_reference(q1, k_cache, v_cache, mask=mask, scale=scale)

@@ -1,0 +1,74 @@
+"""Regex-path partition rules (t5x-style) -> PartitionSpec pytrees.
+
+A rule list is ``[(regex, PartitionSpec or callable), ...]``; the first regex
+matching the '/'-joined parameter path wins.  ``make_param_specs`` mirrors the
+parameter pytree with PartitionSpecs (default: fully replicated).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Sequence[tuple[str, Any]]
+
+
+def tree_paths(tree) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(_key_str(k) for k in path) for path, _ in flat]
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def spec_for_path(path: str, rules: Rules, leaf=None) -> P:
+    for pattern, spec in rules:
+        if re.search(pattern, path):
+            if callable(spec) and not isinstance(spec, P):
+                return spec(path, leaf)
+            return spec
+    return P()
+
+
+def make_param_specs(params, rules: Rules):
+    """Mirror ``params`` with PartitionSpecs chosen by the first matching rule."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        p = "/".join(_key_str(k) for k in path)
+        spec = spec_for_path(p, rules, leaf)
+        ndim = getattr(leaf, "ndim", None)
+        if ndim is not None and len(spec) > ndim:
+            raise ValueError(f"rule for {p} has rank {len(spec)} > param rank {ndim}")
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def make_shardings(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shape_dtype_tree(params_shape_fn: Callable[[], Any], shardings=None):
+    """Build a ShapeDtypeStruct pytree via ``jax.eval_shape`` (no allocation)."""
+    shapes = jax.eval_shape(params_shape_fn)
+    if shardings is None:
+        return shapes
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+
+
+def constrain(x, mesh_or_none, spec: P):
+    """``with_sharding_constraint`` that is a no-op without a mesh context."""
+    if mesh_or_none is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh_or_none, spec))

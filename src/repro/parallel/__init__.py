@@ -1,0 +1,7 @@
+from repro.parallel.branch import (  # noqa: F401
+    branch_parallel, bp_evoformer_block, bp_dap_evoformer_block)
+from repro.parallel.mesh_utils import (  # noqa: F401
+    refactor_mesh, rename_mesh, axis_size, smap, local_slice)
+from repro.parallel.grad_sync import (  # noqa: F401
+    psum_tree, pmean_tree, compressed_psum_tree, zeros_error_state)
+from repro.parallel import dap  # noqa: F401

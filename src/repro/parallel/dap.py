@@ -1,0 +1,202 @@
+"""Dynamic Axial Parallelism (FastFold; paper §3.2/§4.3 baseline + hybrid).
+
+DAP shards the *activations* along an axial dimension across a ``dap`` mesh
+axis — MSA rep over its row axis ``s``, pair rep over its first residue axis
+``i`` — and re-shards with collectives whenever an op needs the other axis:
+
+* row attention / transitions / triangle-start attention: local;
+* column attention / triangle-end attention: ``all_to_all`` transpose;
+* triangle multiplications: ``all_gather`` of the contracted operand;
+* attention biases from the pair rep: project locally, ``all_gather`` heads;
+* outer-product mean: ``all_to_all`` to residue shards + ``all_gather`` of
+  the right operand.
+
+These are exactly the collectives the paper counts against DAP (Table 5):
+at initial-training shapes the activations are small, so the extra
+communication + lost per-op intensity make DAP *slower* than serial — which
+our roofline reproduces — while at fine-tuning shapes DAP wins back.
+
+All functions run inside ``shard_map``; ``msa_l`` is (s/d, r, c_m) and
+``z_l`` is (r/d, r, c_z).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import evoformer as evo
+from repro.core.config import EvoformerConfig
+from repro.nn import layers as nn
+
+AXIS = "dap"
+
+
+def _all_gather(x, axis_name=AXIS, axis=0):
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+
+def _transpose_shards(x, axis_name=AXIS):
+    """(a/d, b, ...) -> (a, b/d, ...): all_to_all re-shard."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=1, concat_axis=0,
+                              tiled=True)
+
+
+def _untranspose_shards(x, axis_name=AXIS):
+    """(a, b/d, ...) -> (a/d, b, ...)."""
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=1,
+                              tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# MSA branch under DAP
+# ---------------------------------------------------------------------------
+
+def dap_msa_branch(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
+                   deterministic: bool = True, axis_name: str = AXIS):
+    kw = dict(attention_impl=cfg.attention_impl,
+              attention_chunk=cfg.attention_chunk)
+    # row attention: local over s-shard; bias gathered over the i-shard
+    bias_l = evo.project_attention_bias(p["row_attn"], z_l)    # (h, r/d, r)
+    bias = _all_gather(bias_l, axis_name, axis=1)              # (h, r, r)
+    upd = evo.gated_attention(p["row_attn"], msa_l, n_head=cfg.n_head_msa,
+                              c_hidden=cfg.c_hidden_att, bias=bias, **kw)
+    if rng is not None:
+        rng, k = jax.random.split(rng)
+        upd = evo.shared_dropout(k, upd, cfg.dropout_msa, shared_axis=0,
+                                 deterministic=deterministic)
+    msa_l = msa_l + upd
+    # column attention: re-shard to residue shards, attend over full s
+    msa_r = _transpose_shards(msa_l, axis_name)                # (s, r/d, c)
+    if cfg.global_column_attn:
+        col = evo.global_attention(p["col_attn"], msa_r.swapaxes(0, 1),
+                                   n_head=cfg.n_head_msa,
+                                   c_hidden=cfg.c_hidden_att)
+    else:
+        col = evo.gated_attention(p["col_attn"], msa_r.swapaxes(0, 1),
+                                  n_head=cfg.n_head_msa,
+                                  c_hidden=cfg.c_hidden_att, **kw)
+    msa_r = msa_r + col.swapaxes(0, 1)
+    msa_l = _untranspose_shards(msa_r, axis_name)              # (s/d, r, c)
+    msa_l = msa_l + evo.transition(p["msa_trans"], msa_l)
+    return msa_l
+
+
+def dap_outer_product_mean(p, msa_l, n_seq_total: int, axis_name: str = AXIS):
+    """OPM with s-sharded MSA -> i-sharded pair update (r/d, r, c_z)."""
+    h = nn.layernorm(p["ln"], msa_l)
+    a = nn.dense(p["a"], h)                                    # (s/d, r, c)
+    b = nn.dense(p["b"], h)
+    a_i = _transpose_shards(a, axis_name)                      # (s, r/d, c)
+    b_full = _all_gather(_transpose_shards(b, axis_name),      # (s, r, c)
+                         axis_name, axis=1)
+    outer = jnp.einsum("sic,sjd->ijcd", a_i, b_full) / n_seq_total
+    outer = outer.reshape(*outer.shape[:2], -1)
+    return nn.dense(p["out"], outer.astype(msa_l.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Pair branch under DAP
+# ---------------------------------------------------------------------------
+
+def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS):
+    x = nn.layernorm(p["ln_in"], z_l)
+    a = jax.nn.sigmoid(nn.dense(p["a_gate"], x)) * nn.dense(p["a"], x)
+    b = jax.nn.sigmoid(nn.dense(p["b_gate"], x)) * nn.dense(p["b"], x)
+    if outgoing:
+        # out[i_l, j] = sum_k a[i_l, k] b[j, k]: gather b rows
+        b_full = _all_gather(b, axis_name, axis=0)             # (r, r, c)
+        o = jnp.einsum("ikc,jkc->ijc", a, b_full)
+    else:
+        # out[i_l, j] = sum_k a[k, i_l] b[k, j]: k is the sharded axis ->
+        # re-shard a to (k, i_l), gather b to (k, r)
+        a_col = _transpose_shards(a, axis_name)                # (r, r/d, c)
+        b_full = _all_gather(b, axis_name, axis=0)             # (r, r, c)
+        o = jnp.einsum("kic,kjc->ijc", a_col, b_full)
+    o = nn.dense(p["out"], nn.layernorm(p["ln_out"], o.astype(z_l.dtype)))
+    g = jax.nn.sigmoid(nn.dense(p["gate"], x))
+    return (g * o).astype(z_l.dtype)
+
+
+def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
+                    deterministic: bool = True, axis_name: str = AXIS):
+    kw = dict(attention_impl=cfg.attention_impl,
+              attention_chunk=cfg.attention_chunk)
+
+    def drop(key_idx, x, shared_axis):
+        if rng is None:
+            return x
+        k = jax.random.fold_in(rng, key_idx)
+        return evo.shared_dropout(k, x, cfg.dropout_pair, shared_axis=shared_axis,
+                                  deterministic=deterministic)
+
+    z_l = z_l + drop(0, dap_triangle_mult(p["tri_mul_out"], z_l, outgoing=True,
+                                          axis_name=axis_name), 0)
+    z_l = z_l + drop(1, dap_triangle_mult(p["tri_mul_in"], z_l, outgoing=False,
+                                          axis_name=axis_name), 0)
+    # starting-node attention: rows local, bias gathered
+    bias = _all_gather(evo.project_attention_bias(p["tri_att_start"], z_l),
+                       axis_name, axis=1)                      # (h, r, r)
+    att = evo.gated_attention(p["tri_att_start"], z_l, n_head=cfg.n_head_pair,
+                              c_hidden=cfg.c_hidden_pair_att, bias=bias, **kw)
+    z_l = z_l + drop(2, att, 0)
+    # ending-node attention: transpose shards, attend, transpose back
+    zt_l = _transpose_shards(z_l, axis_name).swapaxes(0, 1)    # (r/d[j], r[i], c)
+    bias_t = _all_gather(evo.project_attention_bias(p["tri_att_end"], zt_l),
+                         axis_name, axis=1)
+    att_t = evo.gated_attention(p["tri_att_end"], zt_l, n_head=cfg.n_head_pair,
+                                c_hidden=cfg.c_hidden_pair_att, bias=bias_t, **kw)
+    zt_l = zt_l + drop(3, att_t, 0)
+    z_l = _untranspose_shards(zt_l.swapaxes(0, 1), axis_name)
+    z_l = z_l + evo.transition(p["pair_trans"], z_l)
+    return z_l
+
+
+# ---------------------------------------------------------------------------
+# DAP Evoformer block (all three variants) + stack wrappers
+# ---------------------------------------------------------------------------
+
+def dap_evoformer_block(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
+                        deterministic: bool = True, n_seq_total: int,
+                        axis_name: str = AXIS):
+    rngs = (None, None) if rng is None else tuple(jax.random.split(rng))
+    opm = lambda m: dap_outer_product_mean(p["opm"], m, n_seq_total, axis_name)
+    if cfg.variant == "af2":
+        msa_l = dap_msa_branch(p, cfg, msa_l, z_l, rng=rngs[0],
+                               deterministic=deterministic, axis_name=axis_name)
+        z_l = z_l + opm(msa_l)
+        z_l = dap_pair_branch(p, cfg, z_l, rng=rngs[1],
+                              deterministic=deterministic, axis_name=axis_name)
+        return msa_l, z_l
+    if cfg.variant == "multimer":
+        z_l = z_l + opm(msa_l)
+        msa_l = dap_msa_branch(p, cfg, msa_l, z_l, rng=rngs[0],
+                               deterministic=deterministic, axis_name=axis_name)
+        z_l = dap_pair_branch(p, cfg, z_l, rng=rngs[1],
+                              deterministic=deterministic, axis_name=axis_name)
+        return msa_l, z_l
+    if cfg.variant == "parallel":
+        msa_out = dap_msa_branch(p, cfg, msa_l, z_l, rng=rngs[0],
+                                 deterministic=deterministic, axis_name=axis_name)
+        z_out = dap_pair_branch(p, cfg, z_l, rng=rngs[1],
+                                deterministic=deterministic, axis_name=axis_name)
+        return msa_out, z_out + opm(msa_out)
+    raise ValueError(cfg.variant)
+
+
+def shard_inputs(msa, z, axis_name: str = AXIS):
+    """Slice full (replicated) reps into this device's DAP shards."""
+    from repro.parallel.mesh_utils import local_slice
+    return local_slice(msa, axis_name, 0), local_slice(z, axis_name, 0)
+
+
+def unshard_outputs(msa_l, z_l, axis_name: str = AXIS):
+    return _all_gather(msa_l, axis_name, 0), _all_gather(z_l, axis_name, 0)
+
+
+def make_dap_block_fn(n_seq_total: int, axis_name: str = AXIS):
+    """Adapter matching the ``block_fn`` signature of ``evoformer_stack``."""
+    def block_fn(p, cfg, msa_l, z_l, *, rng=None, deterministic=True):
+        return dap_evoformer_block(p, cfg, msa_l, z_l, rng=rng,
+                                   deterministic=deterministic,
+                                   n_seq_total=n_seq_total, axis_name=axis_name)
+    return block_fn

@@ -1,0 +1,61 @@
+"""Gradient synchronization: plain psum and int8 error-feedback compression.
+
+The compressed path targets the *cross-pod* hop of the multi-pod mesh, where
+per-link bandwidth is scarcest: gradients are reduced exactly (bf16/fp32 psum)
+over the intra-pod ``data`` axis, then quantized to int8 with a per-tensor
+scale for the ``pod`` psum.  Quantization error is carried in an error-
+feedback accumulator (Seide et al., 2014-style), so the compression is
+unbiased over time and SGD convergence is preserved.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psum_tree(tree, axis):
+    return jax.lax.psum(tree, axis)
+
+
+def pmean_tree(tree, axis):
+    return jax.lax.pmean(tree, axis)
+
+
+def _quantize(x: jnp.ndarray):
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def compressed_psum_tree(grads, axis, error_state):
+    """int8 error-feedback psum over ``axis``.
+
+    Returns (reduced_grads_fp32, new_error_state).  ``error_state`` is a
+    pytree like ``grads`` holding the residual from the previous step
+    (initialize with zeros).  int8 payloads are summed in int32 (psum of the
+    int32 upcast — exact for the <= 127*n_pods range), then rescaled by the
+    max of the per-device scales (scales psum'd/maxed in a tiny side channel).
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quantize(g32)
+        # shared scale: max over participants so dequantization is consistent
+        scale_max = jax.lax.pmax(scale, axis)
+        # requantize against the shared scale (cheap, local)
+        q = jnp.clip(jnp.round(g32 / scale_max), -127, 127).astype(jnp.int8)
+        new_e = g32 - q.astype(jnp.float32) * scale_max
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        return total.astype(jnp.float32) * scale_max, new_e
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    reduced = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_err = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return reduced, new_err
+
+
+def zeros_error_state(grads):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)

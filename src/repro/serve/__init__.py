@@ -1,0 +1,3 @@
+from repro.serve.steps import (  # noqa: F401
+    make_serve_step, make_prefill_step, cache_partition_rules, serve_batch_specs)
+from repro.serve.engine import DecodeEngine  # noqa: F401

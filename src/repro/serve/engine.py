@@ -1,0 +1,97 @@
+"""Batched decode engine: continuous-batching-style request loop.
+
+Slots hold independent requests; finished sequences (EOS or length budget)
+are replaced from the queue between decode steps without recompiling —
+cache slots are reused in place (cache writes are at per-sequence lengths).
+CPU-scale demo of the serving layer; the same jitted steps are what the
+decode_* dry-run cells lower at production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,)
+    max_new_tokens: int = 16
+    generated: Optional[list] = None
+
+
+class DecodeEngine:
+    def __init__(self, model, cfg, params, *, batch_slots: int,
+                 max_len: int, eos_id: int = -1):
+        self.model, self.cfg, self.params = model, cfg, params
+        self.batch = batch_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = model.init_cache(cfg, batch_slots, max_len)
+        self._decode = jax.jit(
+            lambda p, t, c: model.decode_step(p, cfg, t, c))
+        # single-slot prefill via a batch-1 cache then slot-insert
+        self._prefill1 = jax.jit(
+            lambda p, t, c: model.prefill(p, cfg, t, c))
+        self.slots: list[Optional[Request]] = [None] * batch_slots
+        self.budget = np.zeros(batch_slots, np.int32)
+        self.cur = np.zeros(batch_slots, np.int32)  # last sampled token
+
+    def _insert(self, slot: int, req: Request):
+        cache1 = self.model.init_cache(self.cfg, 1, self.max_len)
+        logits, cache1 = self._prefill1(self.params, req.prompt[None, :], cache1)
+        # copy the batch-1 cache into this slot
+        def put(dst, src):
+            return dst.at[:, slot] if dst.ndim >= 2 else dst
+        new_cache = {}
+        for k, v in self.cache.items():
+            s = cache1[k]
+            if k == "length":
+                new_cache[k] = v.at[slot].set(s[0])
+            else:
+                new_cache[k] = v.at[:, slot].set(s[:, 0])
+        self.cache = new_cache
+        req.generated = []
+        self.slots[slot] = req
+        # the prefill's last logits already produce generated token #1
+        self.budget[slot] = req.max_new_tokens - 1
+        self.cur[slot] = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(int(self.cur[slot]))
+
+    def run(self, requests: list[Request], *, greedy: bool = True) -> dict:
+        queue = list(requests)
+        done: dict[int, list[int]] = {}
+        while queue or any(s is not None for s in self.slots):
+            # fill empty slots
+            for i in range(self.batch):
+                if self.slots[i] is None and queue:
+                    self._insert(i, queue.pop(0))
+            # finalize requests satisfied by prefill alone (or EOS)
+            for i in range(self.batch):
+                req = self.slots[i]
+                if req is not None and (self.budget[i] <= 0 or
+                                        self.cur[i] == self.eos_id):
+                    done[req.rid] = req.generated
+                    self.slots[i] = None
+            if not any(s is not None for s in self.slots):
+                continue
+            # one batched decode step
+            tokens = jnp.asarray(self.cur)[:, None]
+            logits, self.cache = self._decode(self.params, tokens, self.cache)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for i in range(self.batch):
+                req = self.slots[i]
+                if req is None:
+                    continue
+                tok = int(nxt[i])
+                req.generated.append(tok)
+                self.budget[i] -= 1
+                self.cur[i] = tok
+                if tok == self.eos_id or self.budget[i] <= 0:
+                    done[req.rid] = req.generated
+                    self.slots[i] = None
+        return done

@@ -1,0 +1,3 @@
+from repro.train.optim import (  # noqa: F401
+    adamw, sgd, adafactor_like, OptState, clip_by_global_norm,
+    warmup_cosine, warmup_constant, af2_lr_schedule)

@@ -1,0 +1,111 @@
+"""Deliverable (f): per-assigned-architecture smoke tests — reduced config of
+the same family, one forward + one train-grad step on CPU, output shapes +
+no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.models import get_model
+
+ARCHS = cfglib.ARCH_IDS
+
+
+def _batch(cfg, b=2, s=16):
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (b, 8, cfg.frontend_dim), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_grad(arch):
+    cfg = cfglib.get_smoke_config(arch)
+    assert cfg.family == cfglib.get_config(arch).family
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    loss = jax.jit(lambda p: model.loss(p, cfg, batch))(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    grads = jax.jit(jax.grad(lambda p: model.loss(p, cfg, batch)))(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat), \
+        f"{arch}: non-finite grads"
+    gn = float(jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                            for g in flat)))
+    assert gn > 0, f"{arch}: zero gradient"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = cfglib.get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    cache = model.init_cache(cfg, 2, 24)
+    batch = _batch(cfg, s=8)
+    if cfg.family in ("audio", "vlm"):
+        logits, cache = jax.jit(
+            lambda p, b, c: model.prefill(p, cfg, b, c))(params, batch, cache)
+    else:
+        logits, cache = jax.jit(
+            lambda p, t, c: model.prefill(p, cfg, t, c))(
+                params, batch["tokens"], cache)
+    assert logits.shape[-1] == cfg.vocab
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    logits2, cache = jax.jit(
+        lambda p, t, c: model.decode_step(p, cfg, t, c))(params, tok, cache)
+    assert logits2.shape == (2, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2)).all(), f"{arch}: NaN decode"
+
+
+def test_exact_assigned_dimensions():
+    """Configs must match the assignment table exactly."""
+    expect = {
+        "phi3.5-moe-42b-a6.6b": dict(n_layer=32, d_model=4096, n_head=32,
+                                     n_kv_head=8, vocab=32064, n_experts=16,
+                                     top_k=2, moe_d_ff=6400),
+        "qwen2-moe-a2.7b": dict(n_layer=24, d_model=2048, n_head=16,
+                                n_kv_head=16, vocab=151936, n_experts=60,
+                                top_k=4, moe_d_ff=1408, n_shared_experts=4),
+        "zamba2-7b": dict(n_layer=81, d_model=3584, n_head=32, n_kv_head=32,
+                          d_ff=14336, vocab=32000, ssm_state=64),
+        "glm4-9b": dict(n_layer=40, d_model=4096, n_head=32, n_kv_head=2,
+                        d_ff=13696, vocab=151552),
+        "qwen1.5-110b": dict(n_layer=80, d_model=8192, n_head=64, n_kv_head=8,
+                             d_ff=49152, vocab=152064, qkv_bias=True),
+        "deepseek-67b": dict(n_layer=95, d_model=8192, n_head=64, n_kv_head=8,
+                             d_ff=22016, vocab=102400),
+        "deepseek-coder-33b": dict(n_layer=62, d_model=7168, n_head=56,
+                                   n_kv_head=8, d_ff=19200, vocab=32256),
+        "mamba2-2.7b": dict(n_layer=64, d_model=2560, vocab=50280,
+                            ssm_state=128),
+        "whisper-medium": dict(n_layer=24, n_enc_layer=24, d_model=1024,
+                               n_head=16, n_kv_head=16, d_ff=4096, vocab=51865),
+        "internvl2-26b": dict(n_layer=48, d_model=6144, n_head=48,
+                              n_kv_head=8, d_ff=16384, vocab=92553),
+    }
+    for arch, fields in expect.items():
+        cfg = cfglib.get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_shape_applicability():
+    assert cfglib.arch_shapes("mamba2-2.7b") == [
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    assert cfglib.arch_shapes("zamba2-7b")[-1] == "long_500k"
+    for arch in ("glm4-9b", "qwen1.5-110b", "whisper-medium",
+                 "phi3.5-moe-42b-a6.6b"):
+        assert "long_500k" not in cfglib.arch_shapes(arch)
+    assert len(cfglib.ARCH_IDS) == 10
+    total_cells = sum(len(cfglib.arch_shapes(a)) + (
+        1 if "long_500k" not in cfglib.arch_shapes(a) else 0)
+        for a in cfglib.ARCH_IDS)
+    assert total_cells == 40  # 32 runnable + 8 documented skips

@@ -1,0 +1,137 @@
+"""Evoformer block variants (paper Fig. 1) — structure + equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import evoformer as evo
+from repro.core import model as af2
+from repro.core.config import af2_tiny
+from tests.util import randomize
+
+CFG = af2_tiny()
+EV = CFG.evoformer
+S, R = CFG.n_seq, CFG.n_res
+
+
+@pytest.fixture(scope="module")
+def block_params():
+    p = evo.evoformer_block_init(jax.random.PRNGKey(0), EV)
+    return randomize(p, jax.random.PRNGKey(7))
+
+
+@pytest.fixture(scope="module")
+def reps():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    msa = jax.random.normal(k1, (S, R, EV.c_m))
+    z = jax.random.normal(k2, (R, R, EV.c_z))
+    return msa, z
+
+
+def test_block_shapes_all_variants(block_params, reps):
+    msa, z = reps
+    for variant in ("af2", "multimer", "parallel"):
+        cfg = af2_tiny(variant=variant).evoformer
+        m, zz = evo.evoformer_block(block_params, cfg, msa, z)
+        assert m.shape == msa.shape and zz.shape == z.shape
+        assert np.isfinite(np.asarray(m)).all()
+        assert np.isfinite(np.asarray(zz)).all()
+
+
+def test_variants_differ_with_random_params(block_params, reps):
+    """OPM position matters for a single block (they only converge in deep
+    stacks by learning) — with randomized params outputs must differ."""
+    msa, z = reps
+    outs = {}
+    for variant in ("af2", "multimer", "parallel"):
+        cfg = af2_tiny(variant=variant).evoformer
+        _, zz = evo.evoformer_block(block_params, cfg, msa, z)
+        outs[variant] = np.asarray(zz)
+    assert not np.allclose(outs["af2"], outs["parallel"], atol=1e-5)
+    assert not np.allclose(outs["multimer"], outs["parallel"], atol=1e-5)
+
+
+def test_parallel_variant_branch_decomposition(block_params, reps):
+    """Fig 1c identity: parallel block == pair_branch(z) + OPM(msa_branch)."""
+    msa, z = reps
+    cfg = af2_tiny(variant="parallel").evoformer
+    m_blk, z_blk = evo.evoformer_block(block_params, cfg, msa, z)
+    m_manual = evo.msa_branch(block_params, cfg, msa, z)
+    z_manual = evo.pair_branch(block_params, cfg, z) + \
+        evo.outer_product_mean(block_params["opm"], m_manual)
+    np.testing.assert_allclose(np.asarray(m_blk), np.asarray(m_manual),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(z_blk), np.asarray(z_manual),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_parallel_branches_independent(block_params, reps):
+    """The defining property: in the parallel variant, the pair branch must
+    NOT depend on the MSA input (within a block)."""
+    msa, z = reps
+    cfg = af2_tiny(variant="parallel").evoformer
+    z1 = evo.pair_branch(block_params, cfg, z)
+    z2 = evo.pair_branch(block_params, cfg, z)  # msa not an input at all
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2))
+    # whereas for the serial 'af2' variant the pair update DOES see the msa
+    cfg_af2 = af2_tiny(variant="af2").evoformer
+    msa_b = jax.random.normal(jax.random.PRNGKey(9), msa.shape)
+    _, za = evo.evoformer_block(block_params, cfg_af2, msa, z)
+    _, zb = evo.evoformer_block(block_params, cfg_af2, msa_b, z)
+    assert not np.allclose(np.asarray(za), np.asarray(zb), atol=1e-5)
+
+
+def test_opm_mean_semantics(block_params):
+    """OPM divides by n_seq: doubling rows with identical content preserves
+    the output."""
+    p = block_params["opm"]
+    msa = jax.random.normal(jax.random.PRNGKey(2), (4, R, EV.c_m))
+    out1 = evo.outer_product_mean(p, msa)
+    out2 = evo.outer_product_mean(p, jnp.concatenate([msa, msa], 0))
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_triangle_mult_outgoing_vs_incoming_differ(block_params, reps):
+    _, z = reps
+    out = evo.triangle_mult(block_params["tri_mul_out"], z, outgoing=True)
+    inc = evo.triangle_mult(block_params["tri_mul_out"], z, outgoing=False)
+    assert not np.allclose(np.asarray(out), np.asarray(inc), atol=1e-5)
+
+
+def test_shared_dropout_broadcasts():
+    x = jnp.ones((4, 6, 3))
+    out = evo.shared_dropout(jax.random.PRNGKey(0), x, 0.5, shared_axis=0,
+                             deterministic=False)
+    arr = np.asarray(out)
+    # mask shared along axis 0: all rows identical pattern
+    assert (arr == arr[0:1]).all()
+    assert set(np.unique(arr)).issubset({0.0, 2.0})
+
+
+def test_stack_scan_equals_unrolled(block_params, reps):
+    msa, z = reps
+    ps = af2.stack_init(jax.random.PRNGKey(3), EV, 3, scan=True)
+    ps = randomize(ps, jax.random.PRNGKey(11))
+    m1, z1 = af2.evoformer_stack(ps, EV, 3, msa, z, scan=True, remat=False)
+    plist = [jax.tree_util.tree_map(lambda x: x[i], ps) for i in range(3)]
+    m2, z2 = af2.evoformer_stack(plist, EV, 3, msa, z, scan=False, remat=False)
+    np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_full_model_loss_and_grad():
+    from repro.data.protein import protein_sample
+    cfg = af2_tiny()
+    params = af2.init_params(jax.random.PRNGKey(0), cfg)
+    batch = protein_sample(jax.random.PRNGKey(1), cfg)
+    loss, metrics = jax.jit(
+        lambda p, b: af2.loss_fn(p, cfg, b, n_recycle=2))(params, batch)
+    assert np.isfinite(float(loss))
+    assert set(metrics) >= {"fape", "distogram", "masked_msa", "plddt"}
+    g = jax.jit(jax.grad(lambda p: af2.loss_fn(p, cfg, batch)[0]))(params)
+    gn = float(jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                            for x in jax.tree_util.tree_leaves(g))))
+    assert np.isfinite(gn) and gn > 0

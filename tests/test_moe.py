@@ -1,0 +1,118 @@
+"""MoE routing/dispatch invariants (hypothesis) + capacity semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import moe
+from repro.models.lmconfig import LMConfig
+
+
+def _cfg(**kw):
+    base = dict(arch_id="t", family="moe", n_layer=1, d_model=32, n_head=2,
+                n_kv_head=2, vocab=64, n_experts=6, top_k=2, moe_d_ff=16,
+                scan_layers=False, remat="none")
+    base.update(kw)
+    return LMConfig(**base)
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(2, 40), e=st.integers(2, 8), k=st.integers(1, 3),
+       seed=st.integers(0, 999))
+def test_router_topk_invariants(t, e, k, seed):
+    k = min(k, e)
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+    gates, idx, probs = moe.router_topk(logits, k)
+    assert gates.shape == (t, k) and idx.shape == (t, k)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(gates) >= 0).all()
+    # idx are the true argmax-k of probs
+    expect = np.argsort(-np.asarray(probs), axis=-1)[:, :k]
+    assert set(map(tuple, np.sort(np.asarray(idx), -1))) == \
+        set(map(tuple, np.sort(expect, -1)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(t=st.integers(2, 32), cap=st.integers(1, 8), seed=st.integers(0, 999))
+def test_capacity_dispatch_invariants(t, cap, seed):
+    e, k = 4, 2
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+    gates, idx, _ = moe.router_topk(logits, k)
+    disp, comb = moe.capacity_dispatch(idx, gates, e, cap)
+    d = np.asarray(disp)
+    # each (expert, slot) holds at most one token
+    assert (d.sum(axis=0) <= 1.0 + 1e-6).all()
+    # each token occupies at most k slots
+    assert (d.sum(axis=(1, 2)) <= k + 1e-6).all()
+    # no expert exceeds capacity
+    assert (d.sum(axis=(0, 2)) <= cap + 1e-6).all()
+    # combine weights vanish exactly where dispatch does
+    c = np.asarray(comb)
+    assert (c[d == 0] == 0).all()
+
+
+def test_sorted_dispatch_equals_einsum_dispatch():
+    """§Perf H1: the argsort+scatter dispatch must match GShard one-hot
+    dispatch EXACTLY — same capacity-drop pattern, same gradients."""
+    import dataclasses
+    cfg = _cfg(expert_pad_to=8, capacity_factor=0.6)
+    p = moe.moe_ffn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model))
+    cfg_s = dataclasses.replace(cfg, moe_dispatch="sorted")
+    np.testing.assert_allclose(
+        np.asarray(moe.moe_ffn(p, cfg, x)),
+        np.asarray(moe.moe_ffn(p, cfg_s, x)), rtol=2e-5, atol=2e-5)
+    g1 = jax.grad(lambda x: moe.moe_ffn(p, cfg, x).sum())(x)
+    g2 = jax.grad(lambda x: moe.moe_ffn(p, cfg_s, x).sum())(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_generous_capacity_equals_dropless():
+    cfg = _cfg(capacity_factor=100.0)
+    p = moe.moe_ffn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y_cap = moe.moe_ffn(p, cfg, x)
+    y_dense = moe.moe_ffn_dense(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_tight_capacity_drops_tokens():
+    cfg = _cfg(capacity_factor=0.25)
+    p = moe.moe_ffn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y_cap = moe.moe_ffn(p, cfg, x)
+    y_dense = moe.moe_ffn_dense(p, cfg, x)
+    assert not np.allclose(np.asarray(y_cap), np.asarray(y_dense), atol=1e-4)
+
+
+def test_expert_padding_unused():
+    """Padded expert bank slots (EP alignment) must never receive tokens."""
+    cfg = _cfg(n_experts=6, expert_pad_to=8)
+    p = moe.moe_ffn_init(jax.random.PRNGKey(0), cfg)
+    assert p["w_gate"].shape[0] == 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model))
+    logits = x.reshape(-1, cfg.d_model) @ p["router"]["w"]
+    gates, idx, _ = moe.router_topk(logits, cfg.top_k)
+    disp, _ = moe.capacity_dispatch(idx, gates, 8, 16)
+    assert np.asarray(disp)[:, 6:, :].sum() == 0
+
+
+def test_shared_expert_branch_is_parallel():
+    """qwen2-moe BP applicability: output = routed(x) + shared(x) — the two
+    branches read the same input and sum (DESIGN.md §5)."""
+    cfg = _cfg(n_shared_experts=1, shared_d_ff=24, capacity_factor=100.0)
+    p = moe.moe_ffn_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    from repro.nn import layers as nn
+    full = moe.moe_ffn(p, cfg, x)
+    p_norout = dict(p)
+    import dataclasses
+    cfg_nosh = dataclasses.replace(cfg, n_shared_experts=0)
+    routed_only = moe.moe_ffn({k: v for k, v in p.items() if k != "shared"},
+                              cfg_nosh, x)
+    shared_only = nn.swiglu(p["shared"], x)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(routed_only + shared_only),
+                               rtol=2e-5, atol=2e-5)

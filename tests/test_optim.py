@@ -1,0 +1,84 @@
+"""Optimizers vs analytic updates; schedules; clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import optim
+
+
+def test_adamw_single_step_analytic():
+    params = {"w": jnp.array([1.0, -2.0]), "b": jnp.array([0.5])}
+    grads = {"w": jnp.array([0.1, -0.2]), "b": jnp.array([1.0])}
+    opt = optim.adamw(0.1, b1=0.9, b2=0.999, eps=1e-8)
+    state = opt.init(params)
+    new_params, state = opt.update(grads, state, params)
+    for k in params:
+        g = np.asarray(grads[k])
+        m = 0.1 * g
+        v = 0.001 * g * g
+        mhat = m / (1 - 0.9)
+        vhat = v / (1 - 0.999)
+        expect = np.asarray(params[k]) - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+        np.testing.assert_allclose(np.asarray(new_params[k]), expect,
+                                   rtol=1e-5, atol=1e-6)
+    assert int(state.step) == 1
+
+
+def test_adamw_converges_quadratic():
+    opt = optim.adamw(0.1)
+    params = {"x": jnp.array([5.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum((p["x"] - 2.0) ** 2))(params)
+        params, state = opt.update(g, state, params)
+    assert abs(float(params["x"][0]) - 2.0) < 1e-2
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    clipped, norm = optim.clip_by_global_norm(grads, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    total = float(optim.global_norm(clipped))
+    assert abs(total - 1.0) < 1e-5
+    # under the threshold: untouched
+    clipped2, _ = optim.clip_by_global_norm(grads, 100.0)
+    np.testing.assert_allclose(np.asarray(clipped2["a"]), [3.0])
+
+
+def test_af2_schedule():
+    s = optim.af2_lr_schedule(1e-3, warmup_steps=1000, decay_after=50000)
+    assert float(s(jnp.asarray(0))) < 1e-5
+    assert abs(float(s(jnp.asarray(1000))) - 1e-3) < 1e-6
+    assert abs(float(s(jnp.asarray(60000))) - 0.95e-3) < 1e-6
+
+
+def test_warmup_cosine_monotone_decay():
+    s = optim.warmup_cosine(1.0, 10, 100)
+    vals = [float(s(jnp.asarray(i))) for i in range(10, 100, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_adafactor_factored_state_and_convergence():
+    opt = optim.adafactor_like(0.3)
+    params = {"w": jnp.ones((4, 6)) * 3.0, "b": jnp.ones((5,))}
+    state = opt.init(params)
+    vr, vc = state.nu["w"]
+    assert vr.shape == (4,) and vc.shape == (6,)  # O(n+m), not O(nm)
+    assert state.nu["b"].shape == (5,)
+    for _ in range(150):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2))(params)
+        params, state = opt.update(g, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+    assert float(jnp.abs(params["b"]).max()) < 0.3
+
+
+def test_sgd_momentum():
+    opt = optim.sgd(0.1, momentum=0.9)
+    params = {"x": jnp.array([1.0])}
+    state = opt.init(params)
+    g = {"x": jnp.array([1.0])}
+    params, state = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(params["x"]), [0.9])
+    params, state = opt.update(g, state, params)
+    np.testing.assert_allclose(np.asarray(params["x"]), [0.9 - 0.19],
+                               rtol=1e-6)

@@ -1,0 +1,39 @@
+"""Shared test helpers."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+
+
+def randomize(params, key, scale=0.02):
+    """Replace AF2's zero-inits with small noise so equivalence tests are
+    non-vacuous (at init all residual updates are exactly zero)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    new = [l + scale * jax.random.normal(k, l.shape, l.dtype)
+           for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def run_subprocess(code: str, *, devices: int = 8, timeout: int = 560) -> str:
+    """Run test code in a fresh interpreter with N fake XLA host devices
+    (the main pytest process must keep seeing exactly 1 device)."""
+    prologue = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import sys
+        sys.path.insert(0, {str('src')!r})
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", prologue + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, cwd=_repo_root())
+    assert proc.returncode == 0, (
+        f"subprocess failed:\nSTDOUT:\n{proc.stdout[-3000:]}\n"
+        f"STDERR:\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+def _repo_root():
+    import pathlib
+    return str(pathlib.Path(__file__).resolve().parents[1])
