@@ -26,6 +26,62 @@ def attention_paths():
              f"vs_ref={t_ref / t - 1:+.1%}")
 
 
+def evoformer_attention_paths():
+    """Paper hot path (Table 2: Evoformer row/triangle attention = 62-78% of
+    step time): fused Pallas evo_attention vs chunked vs reference, all with
+    the bias+gate epilogue included.  On CPU the Pallas number is
+    interpret-mode — a correctness/trajectory harness, not a speed claim;
+    on TPU the identical call lowers to Mosaic."""
+    from repro.kernels import ops as kops
+    from repro.nn.attention import attention_reference
+    L, s, h, c = 8, 128, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q, k, v, gate = (jax.random.normal(kk, (L, s, h, c), jnp.float32)
+                     for kk in ks[:4])
+    bias = jax.random.normal(ks[4], (h, s, s), jnp.float32)
+
+    def gated(attn_out, g):
+        # g must be the traced jit parameter, not the closed-over array —
+        # otherwise sigmoid(gate) constant-folds out of the baseline timings
+        return jax.nn.sigmoid(g) * attn_out
+
+    t_ref = timeit(jax.jit(lambda q, k, v, b, g: gated(
+        attention_reference(q, k, v, bias=b), g)), q, k, v, bias, gate)
+    emit("kernels/evo_attn_reference_128", t_ref * 1e6, "")
+    for chunk in (32, 64):
+        t = timeit(jax.jit(lambda q, k, v, b, g, ch=chunk: gated(
+            attention_chunked(q, k, v, bias=b, chunk_size=ch), g)),
+            q, k, v, bias, gate)
+        emit(f"kernels/evo_attn_chunked_{chunk}", t * 1e6,
+             f"vs_ref={t_ref / t - 1:+.1%}")
+    t_pal = timeit(jax.jit(kops.evo_attention), q, k, v, bias, gate)
+    emit("kernels/evo_attn_pallas_fused_128", t_pal * 1e6,
+         "interpret_on_cpu;mosaic_on_tpu")
+    t_bwd = timeit(jax.jit(jax.grad(
+        lambda q: kops.evo_attention(q, k, v, bias, gate).sum())), q)
+    emit("kernels/evo_attn_pallas_flash_bwd_128", t_bwd * 1e6,
+         "flash_backward;no_chunked_recompute")
+
+
+def opm_paths():
+    """Outer-product mean: fused row-chunked contraction vs naive (which
+    materializes the (r, r, c_opm^2) tensor before projecting)."""
+    from repro.core import evoformer as evo
+    s, r, c_m, c_opm, c_z = 32, 64, 32, 16, 64
+    p = evo.opm_init(jax.random.PRNGKey(0), c_m, c_opm, c_z)
+    msa = jax.random.normal(jax.random.PRNGKey(1), (s, r, c_m), jnp.float32)
+    t_naive = timeit(jax.jit(lambda p, m: evo.outer_product_mean(p, m)),
+                     p, msa)
+    emit("kernels/opm_naive_r64", t_naive * 1e6,
+         f"intermediate={r * r * c_opm * c_opm * 4 / 1e6:.1f}MB")
+    for rc in (8, 16, 32):
+        t = timeit(jax.jit(lambda p, m, rc=rc: evo.outer_product_mean_fused(
+            p, m, row_chunk=rc)), p, msa)
+        emit(f"kernels/opm_fused_rc{rc}", t * 1e6,
+             f"vs_naive={t_naive / t - 1:+.1%};"
+             f"peak={rc * r * c_opm * c_opm * 4 / 1e6:.1f}MB")
+
+
 def ssd_paths():
     from repro.models.ssm import ssd_chunked, ssd_reference
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
@@ -45,4 +101,4 @@ def ssd_paths():
              f"speedup_vs_scan={t_ref / tt:.1f}x")
 
 
-ALL = [attention_paths, ssd_paths]
+ALL = [attention_paths, evoformer_attention_paths, opm_paths, ssd_paths]

@@ -121,6 +121,7 @@ def main():
     doc.append(ROOFLINE_NOTES)
 
     doc.append(perf_section())
+    doc.append(ATTENTION_IMPLS)
     doc.append(PAPER_CLAIMS)
     (ROOT / "EXPERIMENTS.md").write_text("\n".join(doc))
     print("wrote EXPERIMENTS.md")
@@ -356,6 +357,36 @@ win on the dominant term fell under 5% or the term stopped dominating
 (verdicts above). Remaining headroom is catalogued in DESIGN.md §8 /
 README (future work): fused LN+matmul Pallas kernels for the AF2 pair stack,
 all-gather/compute overlap in the DAP triangle ops, fp8 expert GEMMs.
+"""
+
+ATTENTION_IMPLS = """
+## §Attention impl selection
+
+Which attention implementation runs where (full matrix in ROADMAP.md
+§Attention impl selection):
+
+* `reference` / `chunked` — pure XLA, every backend.  `chunked` is the
+  default and the ONLY path the multi-pod dry-run lowers: Pallas TPU kernels
+  cannot compile on the CPU dry-run backend.  Its bias is chunked lazily
+  along T (never broadcast to a full (lead, H, S, T) fp32 tensor).
+* `pallas` — LM causal-GQA flash kernel; biased non-causal self-attention
+  calls route to the Evoformer kernel; `mask=` is a clear error.  Interpret
+  mode on CPU (the numbers in §Kernel-bench CSV rows named
+  `evo_attn_pallas_*` are interpret-mode correctness-harness times, not
+  speed claims); Mosaic on real TPU.
+* `evo_pallas` — the paper hot path (Table 2: row/triangle attention is
+  62-78% of Evoformer step time), fused end-to-end: one kernel does
+  bias + softmax + sigmoid gate, emits per-row log-sum-exp residuals, and a
+  flash-native Pallas backward (dq/dbias/dgate + dk/dv kernels) consumes
+  them — no chunked-XLA recompute in the VJP.  Verified equivalent to
+  `chunked` (fwd + grads, all three block variants) in
+  tests/test_evoformer.py; DAP passes its gathered sharded bias straight
+  into the same kernel.
+
+The fused outer-product mean (`opm_impl='fused'`, default) contracts
+row-chunks of the outer product directly against the output projection; the
+(r, r, c_opm^2) intermediate never exists (jaxpr-verified in
+tests/test_analysis.py).
 """
 
 PAPER_CLAIMS = """

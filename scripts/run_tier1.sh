@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify entry point (see ROADMAP.md): one command, correct PYTHONPATH.
+#   ./scripts/run_tier1.sh            # whole suite, fail-fast
+#   ./scripts/run_tier1.sh tests/test_kernels.py -k evo   # pass-through args
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -20,8 +20,14 @@ class EvoformerConfig:
     # 'af2' (serial, Fig 1a) | 'multimer' (OPM first, 1b) | 'parallel' (OPM last, 1c)
     variant: str = "parallel"
     global_column_attn: bool = False  # extra-MSA stack uses global column attn
-    attention_impl: str = "chunked"   # 'reference' | 'chunked' | 'pallas'
+    # 'reference' | 'chunked' | 'pallas' | 'evo_pallas' (fused Pallas gated
+    # bias attention: QKV+bias+sigmoid-gate in one kernel, flash backward)
+    attention_impl: str = "chunked"
     attention_chunk: int = 256
+    # 'fused' (row-chunked contraction against the output projection; the
+    # (r, r, c_opm^2) outer-product tensor is never materialized) | 'naive'
+    opm_impl: str = "fused"
+    opm_chunk: int = 32               # residue rows per fused-OPM chunk
 
 
 @dataclasses.dataclass(frozen=True)

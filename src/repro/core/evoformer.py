@@ -86,6 +86,27 @@ def gated_attention(p: Params, x: jnp.ndarray, *, n_head: int, c_hidden: int,
     if bias_input is not None:
         assert bias is None
         bias = project_attention_bias(p, bias_input)       # (h, S, S)
+    if attention_impl == "evo_pallas":
+        from repro.kernels.flash_attention import evo_supported
+        if not evo_supported(s):
+            # poorly factorable length: the kernel would tile near-rowwise,
+            # so the chunked XLA path below is the faster exact fallback
+            attention_impl = "chunked"
+    if attention_impl == "evo_pallas":
+        # Fused Pallas hot path: bias add + softmax + sigmoid gate in one
+        # kernel — the (L, S, H, C) attention output never round-trips HBM
+        # before gating.  The gate dense stays outside (it is a GEMM); its
+        # pre-sigmoid logits feed the kernel epilogue.
+        from repro.kernels import ops as kops
+        gate = nn.dense(p["gate"], h).reshape(*lead, s, n_head, c_hidden)
+        flat = lambda t: t.reshape(-1, s, n_head, c_hidden)
+        if bias is None:  # e.g. MSA column attention: no pair bias —
+            # the bias add is compiled out of the kernel entirely
+            o = kops.evo_attention_nobias(flat(q), flat(k), flat(v), flat(gate))
+        else:
+            o = kops.evo_attention(flat(q), flat(k), flat(v), bias, flat(gate))
+        o = o.reshape(*lead, s, n_head * c_hidden).astype(x.dtype)
+        return nn.dense(p["out"], o)
     o = attention(q, k, v, bias=bias, impl=attention_impl,
                   chunk_size=attention_chunk)
     g = jax.nn.sigmoid(nn.dense(p["gate"], h))
@@ -163,13 +184,62 @@ def opm_init(key, c_m: int, c_hidden: int, c_z: int) -> Params:
 
 
 def outer_product_mean(p: Params, msa: jnp.ndarray) -> jnp.ndarray:
-    """msa (s, r, c_m) -> pair update (r, r, c_z)."""
+    """msa (s, r, c_m) -> pair update (r, r, c_z).  Naive oracle: materializes
+    the full (r, r, c_hidden^2) outer-product tensor before projecting."""
     h = nn.layernorm(p["ln"], msa)
     a = nn.dense(p["a"], h)                                   # (s, r, c)
     b = nn.dense(p["b"], h)
     outer = jnp.einsum("sic,sjd->ijcd", a, b) / msa.shape[0]
     outer = outer.reshape(*outer.shape[:2], -1)
     return nn.dense(p["out"], outer.astype(msa.dtype))
+
+
+def opm_contract(a: jnp.ndarray, b: jnp.ndarray, w: jnp.ndarray,
+                 b_out: jnp.ndarray, denom: float, out_dtype,
+                 row_chunk: int = 32) -> jnp.ndarray:
+    """Fused OPM contraction: ``out[i,j] = ((Σ_s a[s,i] ⊗ b[s,j])/denom) · W``.
+
+    a (s, r_i, c); b (s, r_j, d); w (c*d, c_z).  The (r_i, r_j, c*d)
+    outer-product tensor is never materialized — residue-row chunks of the
+    outer product are contracted directly against the output projection, so
+    the peak temp is (row_chunk, r_j, c*d).  Shared by the serial and DAP
+    (i-sharded) OPM paths.
+    """
+    s, r_i, c = a.shape
+    d = b.shape[-1]
+    wr = w.reshape(c, d, w.shape[-1])
+    rc = min(row_chunk, r_i)
+    pad = (-r_i) % rc
+    a_p = jnp.pad(a, ((0, 0), (0, pad), (0, 0))) if pad else a
+    chunks = jnp.moveaxis(a_p.reshape(s, (r_i + pad) // rc, rc, c), 1, 0)
+
+    def one_chunk(a_c):                                       # (s, rc, c)
+        outer = jnp.einsum("sic,sjd->ijcd", a_c, b) / denom
+        return jnp.einsum("ijcd,cdz->ijz", outer.astype(out_dtype), wr)
+
+    out = jax.lax.map(one_chunk, chunks)                      # (n, rc, r_j, z)
+    out = out.reshape(-1, b.shape[1], wr.shape[-1])[:r_i]
+    return out + b_out
+
+
+def outer_product_mean_fused(p: Params, msa: jnp.ndarray, *,
+                             row_chunk: int = 32) -> jnp.ndarray:
+    """Fused OPM: numerically matches :func:`outer_product_mean` but the
+    (r, r, c_hidden^2) intermediate never exists (see :func:`opm_contract`)."""
+    h = nn.layernorm(p["ln"], msa)
+    a = nn.dense(p["a"], h)                                   # (s, r, c)
+    b = nn.dense(p["b"], h)
+    return opm_contract(a, b, p["out"]["w"], p["out"]["b"],
+                        float(msa.shape[0]), msa.dtype, row_chunk=row_chunk)
+
+
+def opm_apply(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray) -> jnp.ndarray:
+    """OPM dispatch on ``cfg.opm_impl`` ('fused' | 'naive')."""
+    if cfg.opm_impl == "fused":
+        return outer_product_mean_fused(p, msa, row_chunk=cfg.opm_chunk)
+    if cfg.opm_impl == "naive":
+        return outer_product_mean(p, msa)
+    raise ValueError(f"unknown opm impl {cfg.opm_impl!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -288,11 +358,11 @@ def evoformer_block(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray,
     if cfg.variant == "af2":
         msa_out = msa_branch(p, cfg, msa, z, rng=rngs[0],
                              deterministic=deterministic)
-        z = z + outer_product_mean(p["opm"], msa_out)
+        z = z + opm_apply(p["opm"], cfg, msa_out)
         z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic)
         return msa_out, z_out
     if cfg.variant == "multimer":
-        z = z + outer_product_mean(p["opm"], msa)
+        z = z + opm_apply(p["opm"], cfg, msa)
         msa_out = msa_branch(p, cfg, msa, z, rng=rngs[0],
                              deterministic=deterministic)
         z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic)
@@ -303,7 +373,7 @@ def evoformer_block(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray,
         msa_out = msa_branch(p, cfg, msa, z, rng=rngs[0],
                              deterministic=deterministic)
         z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic)
-        z_out = z_out + outer_product_mean(p["opm"], msa_out)
+        z_out = z_out + opm_apply(p["opm"], cfg, msa_out)
         return msa_out, z_out
     raise ValueError(f"unknown Evoformer variant {cfg.variant!r}")
 

@@ -1,9 +1,18 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-Forward = Pallas kernel (interpret mode on CPU, Mosaic on TPU); backward =
-``custom_vjp`` falling back to the memory-efficient chunked XLA path (the
-flash backward kernel recomputes attention anyway, so the chunked VJP has
-the same asymptotics; a dedicated bwd kernel is a further TPU optimization).
+Forward = Pallas kernel (interpret mode on CPU, Mosaic on TPU).
+
+Backward:
+
+* ``evo_attention`` / ``evo_attention_nogate`` are flash-native end to end:
+  the forward emits per-row log-sum-exp residuals and the ``custom_vjp``
+  consumes them with dedicated Pallas dq/dbias/dgate and dk/dv kernels
+  (``flash_attention.evo_attention_bwd``) — no chunked-XLA recompute, no
+  (S, S) probability matrix, and the bias head-reduction over MSA rows
+  happens inside the dq kernel's VMEM accumulator.
+* the LM ``flash_attention`` keeps the memory-efficient chunked-XLA VJP
+  (same asymptotics as a flash backward; a dedicated causal-GQA bwd kernel
+  is a further TPU optimization).
 """
 from __future__ import annotations
 
@@ -45,25 +54,86 @@ flash_attention.defvjp(_fa_fwd, _fa_bwd)
 
 @partial(jax.custom_vjp, nondiff_argnums=(5,))
 def evo_attention(q, k, v, bias, gate, scale: Optional[float] = None):
-    """Fused AF2 gated-bias attention: sigmoid(gate) * attn(q,k,v;bias)."""
+    """Fused AF2 gated-bias attention: sigmoid(gate) * attn(q,k,v;bias).
+
+    q/k/v/gate: (L, S, H, C) with pre-sigmoid gate logits; bias (H, S, S)
+    shared across the L lead rows.  Differentiable in all five tensor args
+    via the flash backward kernels.
+    """
     return fk.evo_attention_fwd(q, k, v, bias, gate, scale=scale,
                                 interpret=not _on_tpu())
 
 
-def _ref_evo(q, k, v, bias, gate, scale):
-    o = attention_chunked(q, k, v, bias=bias, scale=scale,
-                          chunk_size=max(k.shape[-3] // 4, 1))
-    return jax.nn.sigmoid(gate.astype(jnp.float32)).astype(o.dtype) * o
-
-
 def _ea_fwd(q, k, v, bias, gate, scale):
-    return evo_attention(q, k, v, bias, gate, scale), (q, k, v, bias, gate)
+    out, lse = fk.evo_attention_fwd(q, k, v, bias, gate, scale=scale,
+                                    interpret=not _on_tpu(),
+                                    return_residuals=True)
+    return out, (q, k, v, bias, gate, out, lse)
 
 
 def _ea_bwd(scale, res, g):
-    q, k, v, bias, gate = res
-    _, vjp = jax.vjp(lambda *a: _ref_evo(*a, scale), q, k, v, bias, gate)
-    return vjp(g)
+    q, k, v, bias, gate, out, lse = res
+    dq, dk, dv, dbias, dgate = fk.evo_attention_bwd(
+        q, k, v, bias, gate, out, lse, g, scale=scale,
+        interpret=not _on_tpu())
+    return dq, dk, dv, dbias, dgate
 
 
 evo_attention.defvjp(_ea_fwd, _ea_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def evo_attention_nogate(q, k, v, bias, scale: Optional[float] = None):
+    """Biased (non-causal) attention on the Evoformer kernel, no gate fusion.
+
+    The target of ``attention(..., impl='pallas', bias=...)`` dispatch: same
+    tiling and flash backward as :func:`evo_attention`, with the sigmoid-gate
+    epilogue compiled out.
+    """
+    return fk.evo_attention_fwd(q, k, v, bias, None, scale=scale,
+                                interpret=not _on_tpu())
+
+
+def _eang_fwd(q, k, v, bias, scale):
+    out, lse = fk.evo_attention_fwd(q, k, v, bias, None, scale=scale,
+                                    interpret=not _on_tpu(),
+                                    return_residuals=True)
+    return out, (q, k, v, bias, out, lse)
+
+
+def _eang_bwd(scale, res, g):
+    q, k, v, bias, out, lse = res
+    dq, dk, dv, dbias, _ = fk.evo_attention_bwd(
+        q, k, v, bias, None, out, lse, g, scale=scale,
+        interpret=not _on_tpu())
+    return dq, dk, dv, dbias
+
+
+evo_attention_nogate.defvjp(_eang_fwd, _eang_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def evo_attention_nobias(q, k, v, gate, scale: Optional[float] = None):
+    """Gated attention with NO pair bias (e.g. MSA column attention under
+    ``evo_pallas``): the bias add is compiled out of the kernel — no zeros
+    bias is materialized or streamed."""
+    return fk.evo_attention_fwd(q, k, v, None, gate, scale=scale,
+                                interpret=not _on_tpu())
+
+
+def _eanb_fwd(q, k, v, gate, scale):
+    out, lse = fk.evo_attention_fwd(q, k, v, None, gate, scale=scale,
+                                    interpret=not _on_tpu(),
+                                    return_residuals=True)
+    return out, (q, k, v, gate, out, lse)
+
+
+def _eanb_bwd(scale, res, g):
+    q, k, v, gate, out, lse = res
+    dq, dk, dv, _, dgate = fk.evo_attention_bwd(
+        q, k, v, None, gate, out, lse, g, scale=scale,
+        interpret=not _on_tpu())
+    return dq, dk, dv, dgate
+
+
+evo_attention_nobias.defvjp(_eanb_fwd, _eanb_bwd)

@@ -1,9 +1,27 @@
 """Attention: naive reference and memory-efficient chunked (flash-style) paths.
 
 Pure-JAX implementations used by every model; the Pallas TPU kernels in
-``repro.kernels`` are drop-in replacements for the hot paths (selected via
-``impl='pallas'``; the chunked XLA path is what the multi-pod dry-run lowers,
-since Pallas TPU kernels cannot compile on the CPU dry-run backend).
+``repro.kernels`` are drop-in replacements for the hot paths.
+
+Impl selection matrix (see also ROADMAP.md §Attention impl selection):
+
+* ``'reference'`` — naive O(S*T) softmax; the numerical oracle.  Materializes
+  the full (..., H, S, T) score matrix; only for tests/tiny shapes.
+* ``'chunked'``   — flash-style online-softmax scan over KV chunks, pure XLA.
+  The default everywhere: it is what the multi-pod dry-run lowers (Pallas TPU
+  kernels cannot compile on the CPU dry-run backend) and the fallback for
+  shapes/features the kernels don't cover.  Bias is chunked lazily along T —
+  never broadcast to the full (lead, H, S, T) fp32 tensor.
+* ``'pallas'``    — fused Pallas kernels (interpret mode on CPU — a
+  correctness harness; Mosaic on TPU).  Causal/plain GQA calls hit the LM
+  flash kernel; biased non-causal self-attention calls are routed to the
+  Evoformer kernel (``evo_attention_nogate``).  ``mask=`` is rejected with a
+  clear error rather than silently crashing in the kernel.
+* ``'evo_pallas'`` (EvoformerConfig only, handled in
+  ``core.evoformer.gated_attention``) — the fully fused AF2 hot path: one
+  kernel does bias add + softmax + sigmoid gating with a flash-native
+  backward (``kernels.ops.evo_attention``), so the (L, S, H, C) attention
+  output never round-trips HBM before gating.
 
 Layout conventions: ``q``: (..., S, H, D); ``k``/``v``: (..., T, KV, D) with
 ``H = KV * G`` (grouped-query attention).  Masks/bias broadcast to
@@ -93,10 +111,21 @@ def attention_chunked(q, k, v, *, causal: bool = False,
     vc = chunked_axis(v, v.ndim - 3)
     vk = key_valid.reshape(n_chunks, chunk_size)
     xs = {"idx": jnp.arange(n_chunks), "k": kc, "v": vc, "kv_valid": vk}
+    bias_bcast = None
     if bias is not None:
-        b = jnp.broadcast_to(bias, (*lead, h, s, t0)).astype(jnp.float32)
-        b = jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, t - t0)])
-        xs["bias"] = chunked_axis(b, b.ndim - 1)
+        # chunk the bias lazily along T on its OWN shape — broadcasting to
+        # the full (lead, h, s, t) fp32 tensor up front would defeat the
+        # memory saving (it is as large as the score matrix we avoid)
+        bf = bias.astype(jnp.float32)
+        if bf.shape[-1] == 1:
+            bias_bcast = bf            # T-broadcast bias: same every chunk
+        else:
+            if bf.shape[-1] != t0:
+                raise ValueError(
+                    f"bias trailing dim {bf.shape[-1]} must be 1 or match "
+                    f"the key length {t0} (bias shape {bias.shape})")
+            bf = jnp.pad(bf, [(0, 0)] * (bf.ndim - 1) + [(0, t - t0)])
+            xs["bias"] = chunked_axis(bf, bf.ndim - 1)
     if mask is not None:
         mfull = jnp.broadcast_to(mask, (*lead, h, s, t0))
         mfull = jnp.pad(mfull, [(0, 0)] * (mfull.ndim - 1) + [(0, t - t0)],
@@ -111,6 +140,8 @@ def attention_chunked(q, k, v, *, causal: bool = False,
         logits = logits.reshape(*lead, h, s, chunk_size)
         if "bias" in x:
             logits = logits + x["bias"]
+        elif bias_bcast is not None:
+            logits = logits + bias_bcast
         valid = x["kv_valid"]  # (chunk,)
         if causal:
             kpos = x["idx"] * chunk_size + jnp.arange(chunk_size)
@@ -138,14 +169,58 @@ def attention_chunked(q, k, v, *, causal: bool = False,
 
 
 def attention(q, k, v, *, impl: str = "chunked", chunk_size: int = 1024, **kw):
-    """Dispatch: 'reference' | 'chunked' | 'pallas' (TPU kernel)."""
+    """Dispatch: 'reference' | 'chunked' | 'pallas' (TPU kernels).
+
+    ``impl='pallas'``: causal/plain GQA goes to the LM flash kernel; biased
+    non-causal self-attention goes to the Evoformer kernel.  Unsupported
+    combinations raise ``ValueError`` instead of crashing inside the kernel.
+    """
     if impl == "reference":
         return attention_reference(q, k, v, **kw)
     if impl == "chunked":
         return attention_chunked(q, k, v, chunk_size=chunk_size, **kw)
     if impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.flash_attention(q, k, v, **kw)
+        bias = kw.pop("bias", None)
+        mask = kw.pop("mask", None)
+        causal = kw.pop("causal", False)
+        q_offset = kw.pop("q_offset", 0)
+        scale = kw.pop("scale", None)
+        if kw:
+            raise TypeError(
+                f"impl='pallas' got unsupported kwargs {sorted(kw)}")
+        if mask is not None:
+            raise ValueError(
+                "impl='pallas' does not support mask=; use impl='chunked' "
+                "or fold the mask into an additive bias")
+        if q_offset:
+            raise ValueError("impl='pallas' does not support q_offset=")
+        if bias is not None:
+            if causal:
+                raise ValueError(
+                    "impl='pallas' supports bias= only for non-causal "
+                    "self-attention (the Evoformer kernel); causal+bias "
+                    "needs impl='chunked'")
+            *lead, s, h, d = q.shape
+            if k.shape != q.shape or v.shape != q.shape:
+                raise ValueError(
+                    "impl='pallas' with bias= requires self-attention with "
+                    f"h == kv heads; got q {q.shape} vs k {k.shape}")
+            if bias.shape != (h, s, s):
+                raise ValueError(
+                    f"impl='pallas' bias must be (h, s, s)=({h}, {s}, {s}); "
+                    f"got {bias.shape} — broadcastable biases need "
+                    "impl='chunked'")
+            from repro.kernels.flash_attention import evo_supported
+            if not evo_supported(s):
+                raise ValueError(
+                    f"impl='pallas' would tile length {s} into degenerate "
+                    "(< 8-row) blocks; use impl='chunked' for this shape")
+            flat = lambda x: x.reshape(-1, s, h, d)
+            out = kops.evo_attention_nogate(flat(q), flat(k), flat(v), bias,
+                                            scale)
+            return out.reshape(*lead, s, h, d)
+        return kops.flash_attention(q, k, v, causal, scale)
     raise ValueError(f"unknown attention impl {impl!r}")
 
 

@@ -66,7 +66,7 @@ def bp_evoformer_block(p, cfg: EvoformerConfig, msa, z, *, rng=None,
     def branch_msa():
         msa_out = evo.msa_branch(p, cfg, msa, z, rng=rngs[0],
                                  deterministic=deterministic)
-        opm = evo.outer_product_mean(p["opm"], msa_out)
+        opm = evo.opm_apply(p["opm"], cfg, msa_out)
         return msa_out, opm.astype(z.dtype)
 
     def branch_pair():
@@ -99,7 +99,9 @@ def bp_dap_evoformer_block(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
                                          deterministic=deterministic,
                                          axis_name=dap_axis)
         opm = dap_lib.dap_outer_product_mean(p["opm"], msa_out, n_seq_total,
-                                             dap_axis)
+                                             dap_axis,
+                                             row_chunk=cfg.opm_chunk,
+                                             opm_impl=cfg.opm_impl)
         return msa_out, opm.astype(z_l.dtype)
 
     def branch_pair():

@@ -81,17 +81,29 @@ def dap_msa_branch(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
     return msa_l
 
 
-def dap_outer_product_mean(p, msa_l, n_seq_total: int, axis_name: str = AXIS):
-    """OPM with s-sharded MSA -> i-sharded pair update (r/d, r, c_z)."""
+def dap_outer_product_mean(p, msa_l, n_seq_total: int, axis_name: str = AXIS,
+                           row_chunk: int = 32, opm_impl: str = "fused"):
+    """OPM with s-sharded MSA -> i-sharded pair update (r/d, r, c_z).
+
+    With ``opm_impl='fused'`` (the default) uses the fused row-chunked
+    contraction (``evo.opm_contract``): even on the local i-shard the
+    (r/d, r, c^2) outer tensor is never materialized.
+    """
     h = nn.layernorm(p["ln"], msa_l)
     a = nn.dense(p["a"], h)                                    # (s/d, r, c)
     b = nn.dense(p["b"], h)
     a_i = _transpose_shards(a, axis_name)                      # (s, r/d, c)
     b_full = _all_gather(_transpose_shards(b, axis_name),      # (s, r, c)
                          axis_name, axis=1)
-    outer = jnp.einsum("sic,sjd->ijcd", a_i, b_full) / n_seq_total
-    outer = outer.reshape(*outer.shape[:2], -1)
-    return nn.dense(p["out"], outer.astype(msa_l.dtype))
+    if opm_impl == "naive":
+        outer = jnp.einsum("sic,sjd->ijcd", a_i, b_full) / n_seq_total
+        outer = outer.reshape(*outer.shape[:2], -1)
+        return nn.dense(p["out"], outer.astype(msa_l.dtype))
+    if opm_impl != "fused":
+        raise ValueError(f"unknown opm impl {opm_impl!r}")
+    return evo.opm_contract(a_i, b_full, p["out"]["w"], p["out"]["b"],
+                            float(n_seq_total), msa_l.dtype,
+                            row_chunk=row_chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +171,9 @@ def dap_evoformer_block(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
                         deterministic: bool = True, n_seq_total: int,
                         axis_name: str = AXIS):
     rngs = (None, None) if rng is None else tuple(jax.random.split(rng))
-    opm = lambda m: dap_outer_product_mean(p["opm"], m, n_seq_total, axis_name)
+    opm = lambda m: dap_outer_product_mean(p["opm"], m, n_seq_total, axis_name,
+                                           row_chunk=cfg.opm_chunk,
+                                           opm_impl=cfg.opm_impl)
     if cfg.variant == "af2":
         msa_l = dap_msa_branch(p, cfg, msa_l, z_l, rng=rngs[0],
                                deterministic=deterministic, axis_name=axis_name)

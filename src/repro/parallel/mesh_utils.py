@@ -54,20 +54,27 @@ def axis_size(mesh: Mesh, name: str) -> int:
 
 
 def smap(f, mesh: Mesh, in_specs, out_specs):
-    """``jax.shard_map`` with replication-check off (BP's axis_index-dependent
+    """``shard_map`` with replication-check off (BP's axis_index-dependent
     branches are deliberately non-replicated mid-computation), compatible
-    across the check_rep/check_vma rename."""
+    across both the check_rep/check_vma rename and the
+    jax.experimental.shard_map -> jax.shard_map promotion."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
     try:
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
+        return sm(f, mesh=mesh, in_specs=in_specs,
+                  out_specs=out_specs, check_vma=False)
     except TypeError:
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_rep=False)
+        return sm(f, mesh=mesh, in_specs=in_specs,
+                  out_specs=out_specs, check_rep=False)
 
 
 def local_slice(x, axis_name: str, dim: int):
     """Inside shard_map: take this device's equal slice of ``x`` along ``dim``."""
-    n = jax.lax.axis_size(axis_name)
+    if hasattr(jax.lax, "axis_size"):
+        n = jax.lax.axis_size(axis_name)
+    else:  # older jax: psum of a python int folds to the static axis size
+        n = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
     size = x.shape[dim] // n
     return jax.lax.dynamic_slice_in_dim(x, idx * size, size, dim)

@@ -1,0 +1,71 @@
+"""``hypothesis`` if installed, else a tiny deterministic fallback.
+
+The real library is preferred (`pip install -r requirements-dev.txt`), but it
+must not be a hard collection-time dependency: a missing import in one test
+module aborts the whole tier-1 suite.  The fallback implements exactly the
+strategy surface this suite uses — ``integers``, ``sampled_from``,
+``booleans`` — and runs each ``@given`` test on a fixed pseudo-random sample
+of the strategy space (seeded, so failures reproduce), trading shrinking and
+coverage for zero dependencies.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, sample_fn):
+            self._sample_fn = sample_fn
+
+        def sample(self, rng: random.Random):
+            return self._sample_fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            choices = list(seq)
+            return _Strategy(lambda rng: rng.choice(choices))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(1234)
+                for _ in range(n):
+                    draw = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **draw, **kwargs)
+            # hide strategy params from pytest's fixture resolution: the
+            # wrapper's effective signature is the test minus drawn args
+            sig = inspect.signature(fn)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies])
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -1,6 +1,7 @@
-"""HLO collective parsing + roofline math."""
+"""HLO collective parsing + roofline math + jaxpr memory assertions."""
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.analysis.hlo import collective_bytes, parse_hlo_collectives
 from repro.analysis.roofline import HW, model_flops, roofline_terms
@@ -70,3 +71,50 @@ def test_active_params_magnitudes():
     assert 2e9 < active_params(cfglib.get_config("mamba2-2.7b")) < 4e9
     a = active_params(cfglib.get_config("phi3.5-moe-42b-a6.6b"))
     assert 5e9 < a < 9e9  # "a6.6b"
+
+
+# ---------------------------------------------------------------------------
+# Fused outer-product mean: peak-intermediate jaxpr check
+# ---------------------------------------------------------------------------
+
+from tests.util import max_eqn_elems as _max_eqn_elems  # noqa: E402
+
+
+def test_fused_opm_never_materializes_outer_tensor():
+    """Acceptance check: the fused OPM must not create ANY intermediate as
+    large as the (r, r, c_opm^2) outer-product tensor the naive impl builds;
+    and the two must agree numerically."""
+    from repro.core import evoformer as evo
+    s, r, c_m, c_opm, c_z = 6, 24, 16, 8, 12
+    p = evo.opm_init(jax.random.PRNGKey(0), c_m, c_opm, c_z)
+    msa = jax.random.normal(jax.random.PRNGKey(1), (s, r, c_m))
+    outer_elems = r * r * c_opm * c_opm
+
+    naive_peak = _max_eqn_elems(jax.make_jaxpr(
+        lambda m: evo.outer_product_mean(p, m))(msa))
+    fused_peak = _max_eqn_elems(jax.make_jaxpr(
+        lambda m: evo.outer_product_mean_fused(p, m, row_chunk=4))(msa))
+    assert naive_peak >= outer_elems, "detector sanity: naive must hit it"
+    assert fused_peak < outer_elems, (
+        f"fused OPM materialized an intermediate of {fused_peak} elems "
+        f">= the (r, r, c_opm^2) tensor ({outer_elems})")
+    # the fused peak is the per-chunk (row_chunk, r, c^2) slab or the final
+    # stacked (r, r, c_z) output itself — nothing larger
+    assert fused_peak <= max(4 * r * c_opm * c_opm, r * r * c_z)
+
+    np.testing.assert_allclose(
+        np.asarray(evo.outer_product_mean(p, msa)),
+        np.asarray(evo.outer_product_mean_fused(p, msa, row_chunk=4)),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_fused_opm_backward_also_bounded():
+    """The VJP of the fused OPM must not reintroduce the big tensor."""
+    from repro.core import evoformer as evo
+    s, r, c_m, c_opm, c_z = 6, 24, 16, 8, 12
+    p = evo.opm_init(jax.random.PRNGKey(0), c_m, c_opm, c_z)
+    msa = jax.random.normal(jax.random.PRNGKey(1), (s, r, c_m))
+    outer_elems = r * r * c_opm * c_opm
+    grad_peak = _max_eqn_elems(jax.make_jaxpr(jax.grad(
+        lambda m: evo.outer_product_mean_fused(p, m, row_chunk=4).sum()))(msa))
+    assert grad_peak < outer_elems, grad_peak

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.nn.attention import (attention_chunked, attention_reference,
                                 decode_attention)
@@ -90,6 +90,89 @@ def test_decode_matches_masked_reference():
         ref = attention_reference(q1[i:i+1], kc[i:i+1, :L], vc[i:i+1, :L])
         np.testing.assert_allclose(np.asarray(out[i]), np.asarray(ref[0]),
                                    rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_impl_biased_noncausal_routes_to_evo_kernel():
+    """Regression: ``attention(..., impl='pallas', bias=...)`` used to forward
+    bias= to kops.flash_attention, which doesn't accept it (TypeError)."""
+    from repro.nn.attention import attention
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    L, s, h, d = 2, 32, 2, 16
+    q = jax.random.normal(ks[0], (L, s, h, d))
+    k = jax.random.normal(ks[1], (L, s, h, d))
+    v = jax.random.normal(ks[2], (L, s, h, d))
+    bias = jax.random.normal(ks[3], (h, s, s))
+    out = attention(q, k, v, impl="pallas", bias=bias)
+    ref = attention_reference(q, k, v, bias=bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    # and it is differentiable (flash backward, not a crash)
+    g = jax.grad(lambda b: attention(q, k, v, impl="pallas", bias=b).sum())(bias)
+    gr = jax.grad(lambda b: attention_reference(q, k, v, bias=b).sum())(bias)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_impl_default_is_noncausal():
+    """Pin the dispatch default: impl='pallas' without causal= computes
+    bidirectional attention, consistent with 'reference'/'chunked' (the old
+    dispatch inherited kops.flash_attention's causal=True default)."""
+    from repro.nn.attention import attention
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (1, 32, 2, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+    out = attention(q, k, v, impl="pallas")
+    ref = attention_reference(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_pallas_impl_unsupported_combinations_raise_clearly():
+    from repro.nn.attention import attention
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 32, 2, 16))
+    k = jax.random.normal(ks[1], (2, 32, 2, 16))
+    v = jax.random.normal(ks[2], (2, 32, 2, 16))
+    bias = jnp.zeros((2, 32, 32))
+    with pytest.raises(ValueError, match="mask"):
+        attention(q, k, v, impl="pallas", mask=jnp.ones((32,), bool))
+    with pytest.raises(ValueError, match="causal"):
+        attention(q, k, v, impl="pallas", bias=bias, causal=True)
+    with pytest.raises(ValueError, match="q_offset"):
+        attention(q, k, v, impl="pallas", causal=True, q_offset=4)
+    with pytest.raises(ValueError, match="broadcastable"):
+        attention(q, k, v, impl="pallas", bias=jnp.zeros((1, 1, 32)))
+
+
+def test_chunked_bias_is_not_broadcast_upfront():
+    """Regression: the bias used to be broadcast to the full
+    (lead, h, s, t) fp32 tensor before chunking, defeating the memory
+    saving.  No intermediate may reach that size."""
+    lead, h, s, t, chunk = 16, 4, 32, 256, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (lead, s, h, 8))
+    k = jax.random.normal(ks[1], (lead, t, 1, 8))
+    v = jax.random.normal(ks[2], (lead, t, 1, 8))
+    bias = jax.random.normal(ks[3], (h, s, t))
+    full_broadcast = lead * h * s * t
+    from tests.util import max_eqn_elems
+    jaxpr = jax.make_jaxpr(lambda q, k, v, b: attention_chunked(
+        q, k, v, bias=b, chunk_size=chunk))(q, k, v, bias)
+    biggest = max_eqn_elems(jaxpr)
+    assert biggest < full_broadcast, (
+        f"an intermediate of {biggest} elems >= the full bias broadcast "
+        f"({full_broadcast}) — lazy T-chunking regressed")
+    # numerics unchanged (also covers the bias.shape[-1]==1 broadcast path)
+    out = attention_chunked(q, k, v, bias=bias, chunk_size=chunk)
+    ref = attention_reference(q, k, v, bias=bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    b1 = bias[..., :1]
+    out1 = attention_chunked(q, k, v, bias=b1, chunk_size=chunk)
+    ref1 = attention_reference(q, k, v, bias=b1)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(ref1),
+                               rtol=2e-5, atol=2e-5)
 
 
 def test_rope_preserves_norm_and_relative_phase():

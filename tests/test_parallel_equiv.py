@@ -94,6 +94,66 @@ print("hybrid grad ok")
 """, timeout=560)
 
 
+def test_bp_and_dap_with_evo_pallas_impl():
+    """The fused Pallas attention + fused OPM must stay exact under both
+    parallelism schemes (the kernels run inside shard_map; DAP feeds the
+    kernel its gathered sharded bias)."""
+    run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.config import af2_tiny
+from repro.core import model as af2
+from repro.parallel import dap as dap_lib
+from repro.parallel.branch import bp_evoformer_block
+from repro.parallel.mesh_utils import smap
+
+cfg = af2_tiny(variant="parallel", attention_impl="evo_pallas")
+ev = cfg.evoformer
+def randomize(params, key):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, [
+        l + 0.02 * jax.random.normal(k, l.shape, l.dtype)
+        for l, k in zip(leaves, keys)])
+params = randomize(af2.stack_init(jax.random.PRNGKey(0), ev, 1, scan=True),
+                   jax.random.PRNGKey(7))
+s, r = cfg.n_seq, cfg.n_res
+msa = jax.random.normal(jax.random.PRNGKey(1), (s, r, ev.c_m))
+z = jax.random.normal(jax.random.PRNGKey(2), (r, r, ev.c_z))
+ref_m, ref_z = jax.jit(lambda p, m, zz: af2.evoformer_stack(
+    p, ev, 1, m, zz, scan=True, remat=False))(params, msa, z)
+
+mesh = jax.make_mesh((2,), ("branch",))
+bm, bz = jax.jit(smap(lambda p, m, zz: af2.evoformer_stack(
+    p, ev, 1, m, zz, scan=True, remat=False, block_fn=bp_evoformer_block),
+    mesh, (P(), P(), P()), (P(), P())))(params, msa, z)
+np.testing.assert_allclose(np.asarray(ref_m), np.asarray(bm), rtol=2e-4, atol=2e-4)
+np.testing.assert_allclose(np.asarray(ref_z), np.asarray(bz), rtol=2e-4, atol=2e-4)
+print("BP evo_pallas ok")
+
+mesh = jax.make_mesh((2,), ("dap",))
+def dap_stack(p, m, zz):
+    m_l, z_l = dap_lib.shard_inputs(m, zz)
+    m_l, z_l = af2.evoformer_stack(p, ev, 1, m_l, z_l, scan=True, remat=False,
+                                   block_fn=dap_lib.make_dap_block_fn(s))
+    return dap_lib.unshard_outputs(m_l, z_l)
+def loss_d(p):
+    m, zz = smap(dap_stack, mesh, (P(), P(), P()), (P(), P()))(p, msa, z)
+    return jnp.sum(m**2) + jnp.sum(zz**2)
+def loss_r(p):
+    m, zz = af2.evoformer_stack(p, ev, 1, msa, z, scan=True, remat=False)
+    return jnp.sum(m**2) + jnp.sum(zz**2)
+dm, dz = jax.jit(smap(dap_stack, mesh, (P(), P(), P()), (P(), P())))(params, msa, z)
+np.testing.assert_allclose(np.asarray(ref_m), np.asarray(dm), rtol=3e-4, atol=3e-4)
+np.testing.assert_allclose(np.asarray(ref_z), np.asarray(dz), rtol=3e-4, atol=3e-4)
+gd = jax.jit(jax.grad(loss_d))(params)
+gr = jax.jit(jax.grad(loss_r))(params)
+for a, b in zip(jax.tree_util.tree_leaves(gr), jax.tree_util.tree_leaves(gd)):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-2, atol=1e-2)
+print("DAP evo_pallas fwd+grad ok")
+""", devices=2, timeout=560)
+
+
 def test_af2_train_step_dp_vs_bp():
     run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np

@@ -37,3 +37,30 @@ def run_subprocess(code: str, *, devices: int = 8, timeout: int = 560) -> str:
 def _repo_root():
     import pathlib
     return str(pathlib.Path(__file__).resolve().parents[1])
+
+
+def iter_eqn_avals(closed_jaxpr):
+    """All output avals of all eqns, recursing into sub-jaxprs (scan/map
+    bodies) — shared by the peak-intermediate memory assertions."""
+    from jax import core
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for var in eqn.outvars:
+                yield var.aval
+            for val in eqn.params.values():
+                items = val if isinstance(val, (tuple, list)) else (val,)
+                for it in items:
+                    if isinstance(it, core.ClosedJaxpr):
+                        yield from walk(it.jaxpr)
+                    elif isinstance(it, core.Jaxpr):
+                        yield from walk(it)
+
+    yield from walk(closed_jaxpr.jaxpr)
+
+
+def max_eqn_elems(closed_jaxpr) -> int:
+    """Largest eqn-output aval, in elements."""
+    import numpy as np
+    return max(int(np.prod(a.shape)) for a in iter_eqn_avals(closed_jaxpr)
+               if getattr(a, "shape", None))
