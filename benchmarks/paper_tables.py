@@ -16,36 +16,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, load_dryrun, timeit
-from repro.analysis.roofline import HW, af2_model_flops
+from repro.analysis.roofline import (HW, af2_model_flops, estimate_block_time,
+                                     evo_branch_flops)
 from repro.core import evoformer as evo
 from repro.core import model as af2
 from repro.core.config import af2_initial, af2_finetune, af2_tiny
+from repro.parallel.plan import auto_plan
 
 HWC = HW()
 
-
-def _branch_flops(cfg):
-    """Analytical FLOPs of the MSA branch (+OPM) vs the pair branch for one
-    Evoformer block — BP's load balance (paper §4.2 'approximate amount of
-    computation')."""
-    e = cfg.evoformer
-    s, r, m, z = cfg.n_seq, cfg.n_res, e.c_m, e.c_z
-    ha = e.n_head_msa * e.c_hidden_att
-    row = 2 * s * r * m * ha * 4 + 2 * s * r * r * ha * 2
-    col = 2 * s * r * m * ha * 4 + 2 * r * s * s * ha * 2
-    mtrans = 2 * s * r * m * 4 * m * 2
-    opm = (2 * s * r * m * e.c_hidden_opm * 2 +
-           2 * r * r * s * e.c_hidden_opm ** 2 +
-           2 * r * r * e.c_hidden_opm ** 2 * z)
-    msa_branch = row + col + mtrans + opm
-    c_mul = e.c_hidden_mul
-    tri_mul = 2 * (2 * r * r * z * c_mul * 3 + 2 * r ** 3 * c_mul +
-                   2 * r * r * c_mul * z)
-    hp = e.n_head_pair * e.c_hidden_pair_att
-    tri_att = 2 * (2 * r * r * z * hp * 4 + 2 * r ** 3 * hp * 2)
-    ptrans = 2 * r * r * z * 4 * z * 2
-    pair_branch = tri_mul + tri_att + ptrans
-    return msa_branch, pair_branch
+# BP's load balance (paper §4.2 'approximate amount of computation') comes
+# from the shared analytical model in repro.analysis.roofline — the same
+# per-block costs auto_plan selects layouts with.
+_branch_flops = evo_branch_flops
 
 
 # ---------------------------------------------------------------------------
@@ -179,6 +162,24 @@ def table6_hybrid():
              f"speedup={base / t - 1:+.2%}")
 
 
+def table56_plan_selection():
+    """The paper's Table 5/6 preference, reproduced by ``auto_plan``: serial
+    DP while the batch covers the devices; BP=2 once a 2-device group is
+    forced at initial shapes; BP x DAP hybrids for larger fine-tune groups.
+    Emits the selected plan + roofline block time for each scenario."""
+    scenarios = [
+        ("initial", af2_initial(), 256, 256),   # paper: 256 dev, batch 128x2
+        ("initial", af2_initial(), 256, 128),   # group 2 -> BP (Table 5)
+        ("finetune", af2_finetune(), 256, 128), # group 2 -> DAP wins back
+        ("finetune", af2_finetune(), 512, 128), # group 4 -> BP x DAP (T6)
+    ]
+    for process, cfg, n_dev, batch in scenarios:
+        plan = auto_plan(n_dev, cfg, global_batch=batch)
+        t = estimate_block_time(cfg, bp=plan.branch, dap=plan.dap, hw=HWC)
+        emit(f"table56/auto_{process}_d{n_dev}_b{batch}", t * 1e6,
+             f"bp={plan.branch} dap={plan.dap} dp={plan.pod * plan.data}")
+
+
 # ---------------------------------------------------------------------------
 # Table 4: end-to-end training-days model
 # ---------------------------------------------------------------------------
@@ -238,4 +239,4 @@ def fig5_accuracy_proxy(steps: int = 10):
 
 
 ALL = [table2_variants, table3_bp_speedup, table5_bp_vs_dap, table6_hybrid,
-       table4_end2end, fig5_accuracy_proxy]
+       table56_plan_selection, table4_end2end, fig5_accuracy_proxy]

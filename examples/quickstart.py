@@ -36,13 +36,13 @@ grads = jax.jit(jax.grad(lambda p: af2.loss_fn(p, cfg, batch)[0]))(params)
 params, state = opt.update(grads, state, params)
 print("one optimizer step done")
 
-# Branch Parallelism: same math, two devices
+# Branch Parallelism: same math, two devices — declared via a ParallelPlan
 if len(jax.devices()) >= 2:
     from jax.sharding import PartitionSpec as P
-    from repro.parallel.branch import bp_evoformer_block
     from repro.parallel.mesh_utils import smap
+    from repro.parallel.plan import ParallelPlan
 
-    mesh = jax.make_mesh((2,), ("branch",))
+    built = ParallelPlan(branch=2).build(jax.devices()[:2], cfg=cfg)
     e = cfg.evoformer
     msa = jnp.asarray(batch["msa_feat"][:, :, :e.c_m], jnp.float32)
     z = jax.random.normal(jax.random.PRNGKey(2), (cfg.n_res, cfg.n_res, e.c_z))
@@ -50,8 +50,8 @@ if len(jax.devices()) >= 2:
     serial = jax.jit(lambda p, m, zz: af2.evoformer_stack(
         p, e, 1, m, zz, scan=True, remat=False))(blk, msa, z)
     bp = jax.jit(smap(lambda p, m, zz: af2.evoformer_stack(
-        p, e, 1, m, zz, scan=True, remat=False, block_fn=bp_evoformer_block),
-        mesh, (P(), P(), P()), (P(), P())))(blk, msa, z)
+        p, e, 1, m, zz, scan=True, remat=False, block_fn=built.block_fn),
+        built.mesh, (P(), P(), P()), (P(), P())))(blk, msa, z)
     diff = max(float(jnp.abs(a - b).max()) for a, b in zip(serial, bp))
     print(f"BP=2 vs serial max |diff| = {diff:.2e}  (Branch Parallelism is "
           "exact, paper §4.2)")

@@ -1,14 +1,18 @@
 """End-to-end AlphaFold2 training driver (paper reproduction scale knobs).
 
-Defaults are CPU-runnable; ``--preset small`` is a ~20M-param model,
-``--preset paper`` is the full 93M model-1 recipe (BP=2 x DAP across the
-model axis on a real pod).  Demonstrates the full stack: synthetic protein
-pipeline -> Parallel Evoformer -> BP/DAP/DP shard_map step -> Adam + AF2 LR
-schedule -> checkpoint/restart + straggler watchdog.
+Defaults are CPU-runnable; ``--preset small`` is a ~20M-param model (half
+the channel widths / 2/3 the depth of model-1 at full initial-training data
+shapes), ``--preset paper`` is the full 93M model-1 recipe (BP=2 x DAP
+across the model axis on a real pod).  Demonstrates the full stack:
+synthetic protein pipeline -> Parallel Evoformer -> a ParallelPlan-built
+BP/DAP/DP shard_map step -> Adam + AF2 LR schedule -> checkpoint/restart
+(with plan metadata) + straggler watchdog.
 
   PYTHONPATH=src python examples/train_af2.py --steps 5
   PYTHONPATH=src python examples/train_af2.py --devices 8 --bp 2 --dap 2 \
       --batch 8 --steps 5
+  PYTHONPATH=src python examples/train_af2.py --devices 8 --auto-plan \
+      --batch 4 --steps 5
 """
 import argparse
 import os
@@ -21,6 +25,9 @@ ap.add_argument("--batch", type=int, default=2)
 ap.add_argument("--devices", type=int, default=0)
 ap.add_argument("--bp", type=int, default=1)
 ap.add_argument("--dap", type=int, default=1)
+ap.add_argument("--auto-plan", action="store_true",
+                help="roofline-driven DP x BP x DAP selection "
+                     "(repro.parallel.plan.auto_plan)")
 ap.add_argument("--ckpt-dir", default="/tmp/af2_ckpt")
 args = ap.parse_args()
 
@@ -28,11 +35,13 @@ if args.devices:
     os.environ["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
                                f"{args.devices}")
 
-sys.argv = [sys.argv[0], "--af2", {"tiny": "tiny", "small": "tiny",
+sys.argv = [sys.argv[0], "--af2", {"tiny": "tiny", "small": "small",
                                    "paper": "initial"}[args.preset],
             "--steps", str(args.steps), "--batch", str(args.batch),
             "--bp", str(args.bp), "--dap", str(args.dap),
             "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"]
+if args.auto_plan:
+    sys.argv += ["--auto-plan"]
 if args.devices:
     sys.argv += ["--devices", str(args.devices)]
 

@@ -1,8 +1,24 @@
 #!/usr/bin/env bash
 # Tier-1 verify entry point (see ROADMAP.md): one command, correct PYTHONPATH.
-#   ./scripts/run_tier1.sh            # whole suite, fail-fast
+#   ./scripts/run_tier1.sh            # whole suite + multi-device tier
 #   ./scripts/run_tier1.sh tests/test_kernels.py -k evo   # pass-through args
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+
+if [ "$#" -gt 0 ]; then
+  exec python -m pytest -x -q "$@"
+fi
+
+python -m pytest -x -q
+
+# tier-1b: multi-device pass so BP/DAP layout regressions can't land green.
+# The BP/DAP/hybrid equivalence suite (tests/test_parallel_equiv.py) already
+# runs multi-device in the main pass — each test spawns a subprocess that
+# sets its own 8-device XLA_FLAGS — so re-listing it here would repeat it
+# byte-for-byte.  This pass exists for the IN-PROCESS multi-device tests
+# (@needs_8_devices in tests/test_plan.py), which only activate when the
+# parent interpreter sees 8 devices.
+echo "== tier-1b: multi-device (8 fake host devices) =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+  python -m pytest -x -q tests/test_plan.py

@@ -9,6 +9,15 @@ class HW:
     peak_flops: float = 197e12      # bf16 FLOP/s per chip
     hbm_bw: float = 819e9           # B/s per chip
     ici_bw: float = 50e9            # B/s per link
+    # per-collective dispatch/sync overhead (DAP issues ~13 collectives per
+    # Evoformer block vs BP's single fused psum — at initial-training shapes
+    # this latency term is what sinks DAP, per the paper's Table 5)
+    coll_launch: float = 20e-6
+    # rows below which a sharded matmul under-utilizes the MXU pipeline
+    # (2 double-buffered 128-row tiles); sharding an axis past this loses
+    # per-op intensity (paper §4.2: BP "retains the same computational
+    # intensity", DAP does not)
+    tile_rows: float = 256.0
 
 
 def roofline_terms(*, total_flops: float, total_bytes: float,
@@ -81,6 +90,110 @@ def active_params(cfg) -> float:
         enc = cfg.n_enc_layer * (att / 2 + ffn)
         return dec + enc + v * d
     raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# AF2 per-block costs under (BP, DAP) splits — consumed by
+# repro.parallel.plan.auto_plan and benchmarks/paper_tables.py (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def evo_branch_flops(cfg) -> tuple:
+    """(msa_branch + OPM, pair_branch) fwd FLOPs for one main-Evoformer block.
+
+    These are the two dependency-free branches of the *parallel* variant —
+    BP's load balance is ``max(f_msa, f_pair) / (f_msa + f_pair)`` (paper
+    §4.2 'approximate amount of computation')."""
+    e = cfg.evoformer
+    s, r, m, z = cfg.n_seq, cfg.n_res, e.c_m, e.c_z
+    ha = e.n_head_msa * e.c_hidden_att
+    row = 2 * s * r * m * ha * 4 + 2 * s * r * r * ha * 2
+    col = 2 * s * r * m * ha * 4 + 2 * r * s * s * ha * 2
+    mtrans = 2 * s * r * m * 4 * m * 2
+    opm = (2 * s * r * m * e.c_hidden_opm * 2 +
+           2 * r * r * s * e.c_hidden_opm ** 2 +
+           2 * r * r * e.c_hidden_opm ** 2 * z)
+    msa_branch = row + col + mtrans + opm
+    c_mul = e.c_hidden_mul
+    tri_mul = 2 * (2 * r * r * z * c_mul * 3 + 2 * r ** 3 * c_mul +
+                   2 * r * r * c_mul * z)
+    hp = e.n_head_pair * e.c_hidden_pair_att
+    tri_att = 2 * (2 * r * r * z * hp * 4 + 2 * r ** 3 * hp * 2)
+    ptrans = 2 * r * r * z * 4 * z * 2
+    pair_branch = tri_mul + tri_att + ptrans
+    return msa_branch, pair_branch
+
+
+def dap_comm_bytes(cfg, dap: int, *, elt: int = 2) -> tuple:
+    """(msa_branch, pair_branch) per-device fwd collective bytes for one
+    block at DAP extent ``dap`` — the schedule of repro.parallel.dap:
+    tiled all_gathers receive (d-1)/d of the FULL tensor, all_to_alls move
+    (d-1)/d of a 1/d shard."""
+    if dap <= 1:
+        return 0.0, 0.0
+    e = cfg.evoformer
+    s, r, d = cfg.n_seq, cfg.n_res, dap
+    gather = (d - 1) / d
+    a2a = (d - 1) / (d * d)
+    msa = (e.n_head_msa * r * r * gather          # row-attn bias gather
+           + 2 * s * r * e.c_m * a2a              # col-attn transpose + back
+           + s * r * e.c_hidden_opm * a2a         # OPM: a -> residue shards
+           + s * r * e.c_hidden_opm * (a2a + gather)) * elt  # OPM: b full
+    pair = (2 * r * r * e.c_hidden_mul * gather   # tri-mult b gathers (x2)
+            + r * r * e.c_hidden_mul * a2a        # tri-mult-in a transpose
+            + 2 * e.n_head_pair * r * r * gather  # tri-att bias gathers (x2)
+            + 2 * r * r * e.c_z * a2a) * elt      # end-att transpose + back
+    return msa, pair
+
+
+# DAP collectives per block fwd (the repro.parallel.dap schedule): under the
+# BP x DAP hybrid each device only issues its own branch's share
+_N_DAP_COLLECTIVES_MSA = 6
+_N_DAP_COLLECTIVES_PAIR = 7
+
+
+def bp_exchange_bytes(cfg, dap: int = 1, *, elt: int = 2) -> float:
+    """Per-device fwd bytes of BP's single block-end psum: msa_out (s,r,c_m)
+    + OPM and pair contributions (2x (r,r,c_z)), DAP-sharded if hybrid.
+    A 2-participant allreduce moves 2(n-1)/n = 1x the payload."""
+    e = cfg.evoformer
+    payload = (cfg.n_seq * cfg.n_res * e.c_m +
+               2 * cfg.n_res * cfg.n_res * e.c_z) / max(dap, 1)
+    return payload * elt
+
+
+def estimate_block_time(cfg, *, bp: int = 1, dap: int = 1, hw: HW = HW(),
+                        fwd_bwd: bool = True) -> float:
+    """Roofline seconds for one main-Evoformer block per device under a
+    (BP, DAP) split.  Captures the three effects that decide the paper's
+    Table 5/6 preferences:
+
+    * DAP divides branch FLOPs by ``dap`` but loses per-op intensity once the
+      sharded axis drops below a tile (``hw.tile_rows``) — BP keeps full
+      shapes ("the same computational intensity is retained", §4.2);
+    * DAP pays ~13 collectives/block (bytes + ``coll_launch`` each); BP pays
+      one fused psum whose payload shrinks 1/dap under the hybrid;
+    * BP=2 runs the two branches concurrently: time is the max branch.
+
+    ``fwd_bwd`` scales compute x3 and communication x2 (backward re-runs the
+    collective schedule once; matmul backward is ~2x forward FLOPs)."""
+    f_msa, f_pair = evo_branch_flops(cfg)
+    d = max(dap, 1)
+    eff_msa = min(1.0, (cfg.n_seq / d) / hw.tile_rows)
+    eff_pair = min(1.0, (cfg.n_res / d) / hw.tile_rows)
+    t_msa = f_msa / d / (hw.peak_flops * eff_msa)
+    t_pair = f_pair / d / (hw.peak_flops * eff_pair)
+    b_msa, b_pair = dap_comm_bytes(cfg, d)
+    kc, kb = (3.0, 2.0) if fwd_bwd else (1.0, 1.0)
+    a_msa = (_N_DAP_COLLECTIVES_MSA * hw.coll_launch) if d > 1 else 0.0
+    a_pair = (_N_DAP_COLLECTIVES_PAIR * hw.coll_launch) if d > 1 else 0.0
+    c_msa = b_msa / hw.ici_bw + a_msa
+    c_pair = b_pair / hw.ici_bw + a_pair
+    if bp > 1:
+        t = max(kc * t_msa + kb * c_msa, kc * t_pair + kb * c_pair) + \
+            kb * (bp_exchange_bytes(cfg, d) / hw.ici_bw + hw.coll_launch)
+    else:
+        t = kc * (t_msa + t_pair) + kb * (c_msa + c_pair)
+    return t
 
 
 def af2_model_flops(cfg, n_recycle: float = 1.0) -> float:

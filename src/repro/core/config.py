@@ -93,6 +93,27 @@ def af2_finetune(variant: str = "parallel", attention_impl: str = "chunked",
                             n_extra_seq=5120, **kw)
 
 
+def af2_small(variant: str = "parallel", attention_impl: str = "chunked",
+              **kw) -> AlphaFold2Config:
+    """~20M-param model (measured: see tests/test_plan.py): half the channel
+    widths and 2/3 the depth of model-1, full initial-training data shapes —
+    big enough that BP/DAP layouts behave like the paper's, small enough to
+    fine-tune on one host."""
+    ev = EvoformerConfig(c_m=128, c_z=64, c_hidden_att=16,
+                         c_hidden_pair_att=16, c_hidden_opm=16,
+                         c_hidden_mul=64, variant=variant,
+                         attention_impl=attention_impl)
+    ex = EvoformerConfig(c_m=32, c_z=64, c_hidden_att=8, c_hidden_opm=16,
+                         c_hidden_mul=64, global_column_attn=True,
+                         variant=variant, attention_impl=attention_impl)
+    st = StructureConfig(c_s=256, c_z=64, n_layer=6, n_head=8, c_hidden=16)
+    defaults = dict(n_evoformer=40, n_extra_msa_blocks=4, evoformer=ev,
+                    extra=ex, structure=st, n_res=256, n_seq=128,
+                    n_extra_seq=1024)
+    defaults.update(kw)
+    return AlphaFold2Config(**defaults)
+
+
 def af2_tiny(variant: str = "parallel", attention_impl: str = "chunked",
              **kw) -> AlphaFold2Config:
     """CPU-sized config for tests/examples."""

@@ -3,6 +3,12 @@
 Deterministic batch synthesis (protein or token) per (seed, step); each host
 produces only its shard and the loader prefetches the next batch on a worker
 thread while the current step runs — the standard input-pipeline overlap.
+
+Lifecycle: one iteration at a time.  ``__iter__`` while a previous iteration
+is live raises; ``close()`` is idempotent and returns the loader to a fresh
+state, so ``iter -> close -> iter`` works (each iteration restarts at
+``start_step`` — synthesis is deterministic, so resuming a run mid-stream is
+done by constructing the loader with the resumed ``start_step``).
 """
 from __future__ import annotations
 
@@ -15,41 +21,59 @@ class ShardedLoader:
     def __init__(self, make_batch: Callable[[int], dict], *,
                  start_step: int = 0, prefetch: int = 2):
         self._make_batch = make_batch
-        self._step = start_step
-        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
-        self._stop = threading.Event()
+        self._start_step = start_step
+        self._prefetch = prefetch
+        self._q: Optional[queue.Queue] = None
+        self._stop: Optional[threading.Event] = None
         self._thread: Optional[threading.Thread] = None
 
-    def _worker(self):
-        step = self._step
-        while not self._stop.is_set():
+    def _worker(self, q: queue.Queue, stop: threading.Event, step: int):
+        while not stop.is_set():
             batch = self._make_batch(step)
-            while not self._stop.is_set():
+            while not stop.is_set():
                 try:
-                    self._q.put((step, batch), timeout=0.1)
+                    q.put((step, batch), timeout=0.1)
                     break
                 except queue.Full:
                     continue
             step += 1
 
     def __iter__(self) -> Iterator:
-        self._thread = threading.Thread(target=self._worker, daemon=True)
-        self._thread.start()
+        if self._thread is not None and self._thread.is_alive():
+            raise RuntimeError(
+                "ShardedLoader is already being iterated; close() it before "
+                "starting a second iteration (two workers racing on one "
+                "queue would interleave steps nondeterministically)")
+        q = queue.Queue(maxsize=self._prefetch)
+        stop = threading.Event()
+        thread = threading.Thread(target=self._worker,
+                                  args=(q, stop, self._start_step),
+                                  daemon=True)
+        self._q, self._stop, self._thread = q, stop, thread
+        thread.start()
         try:
             while True:
-                step, batch = self._q.get()
-                yield step, batch
+                yield q.get()
         finally:
-            self.close()
+            # close THIS iteration's resources only: a generator finalized
+            # late (GC) must not tear down a newer iteration
+            self._close(q, stop, thread)
 
     def close(self):
-        self._stop.set()
+        """Stop the current iteration's worker; safe to call repeatedly."""
         if self._thread is not None:
-            # drain so the worker unblocks
-            try:
-                while True:
-                    self._q.get_nowait()
-            except queue.Empty:
-                pass
-            self._thread.join(timeout=2.0)
-            self._thread = None
+            self._close(self._q, self._stop, self._thread)
+
+    def _close(self, q, stop, thread):
+        if stop is None:
+            return
+        stop.set()
+        # drain so the worker unblocks from a full queue
+        try:
+            while True:
+                q.get_nowait()
+        except queue.Empty:
+            pass
+        thread.join(timeout=2.0)
+        if self._thread is thread:
+            self._q = self._stop = self._thread = None

@@ -28,7 +28,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import configs as cfglib
 from repro.analysis.hlo import parse_hlo_collectives
 from repro.analysis.roofline import HW, model_flops, roofline_terms
-from repro.launch.mesh import make_production_mesh, af2_logical_mesh, dp_axes_of
+from repro.launch.mesh import production_mesh_from_env, dp_axes_of
 from repro.models import get_model
 from repro.serve.steps import cache_partition_rules
 from repro.train.optim import adamw, adafactor_like
@@ -44,12 +44,7 @@ OUT_DIR = pathlib.Path(os.environ.get(
 def _mesh(multi_pod: bool):
     """Production mesh, overridable via REPRO_DRYRUN_MESH='4x4[x2]' for the
     small-mesh self-test (tests/test_dryrun_small.py)."""
-    override = os.environ.get("REPRO_DRYRUN_MESH")
-    if override:
-        dims = tuple(int(x) for x in override.split("x"))
-        axes = ("pod", "data", "model")[-len(dims):]
-        return jax.make_mesh(dims, axes)
-    return make_production_mesh(multi_pod=multi_pod)
+    return production_mesh_from_env(multi_pod)
 
 
 # ---------------------------------------------------------------------------
@@ -268,17 +263,20 @@ def run_af2_cell(process: str, multi_pod: bool, *, bp=2, dap=8,
                  remat="block", suffix="") -> dict:
     from repro.core.config import af2_initial, af2_finetune
     from repro.core import model as af2
+    from repro.parallel.plan import ParallelPlan
     from repro.train.trainstep import make_af2_train_step
     from repro.data.protein import protein_sample
 
-    cfg = (af2_initial if process == "initial" else af2_finetune)(
-        variant=variant, remat=remat)
+    cfg = (af2_initial if process == "initial" else af2_finetune)()
     base = _mesh(multi_pod)
-    mesh = af2_logical_mesh(base, bp=bp, dap=dap) if bp * dap > 1 else base
+    plan = ParallelPlan.for_mesh(base, branch=bp, dap=max(dap, 1),
+                                 variant=variant, remat=remat)
+    cfg = plan.apply_to(cfg)
+    built = plan.build(base, cfg=cfg)
+    mesh = built.mesh
     n_dev = mesh.devices.size
     opt = adamw(1e-3, clip_norm=0.1)
-    step, _ = make_af2_train_step(cfg, opt, mesh, bp=bp > 1, dap=dap,
-                                  n_recycle=n_recycle)
+    step, _ = make_af2_train_step(cfg, opt, built, n_recycle=n_recycle)
     key = jax.random.PRNGKey(0)
     pshapes = tree_shapes(lambda: af2.init_params(key, cfg))
     oshapes = tree_shapes(lambda: opt.init(jax.tree_util.tree_map(
@@ -288,11 +286,10 @@ def run_af2_cell(process: str, multi_pod: bool, *, bp=2, dap=8,
         lambda s: jax.ShapeDtypeStruct((global_batch,) + s.shape, s.dtype),
         sshapes)
     rep = NamedSharding(mesh, P())
-    dp = dp_axes_of(mesh)
     bsh = jax.tree_util.tree_map(
         lambda s: jax.ShapeDtypeStruct(
             s.shape, s.dtype,
-            sharding=NamedSharding(mesh, P(dp if len(dp) > 1 else dp[0]))),
+            sharding=NamedSharding(mesh, built.batch_spec)),
         bshapes)
     state = {
         "params": jax.tree_util.tree_map(
@@ -321,8 +318,7 @@ def run_af2_cell(process: str, multi_pod: bool, *, bp=2, dap=8,
     for name, nb in (("l1", 1), ("l2", 2)):
         c2 = dataclasses.replace(cfg, n_evoformer=nb, n_extra_msa_blocks=1,
                                  scan_blocks=False)
-        step2, _ = make_af2_train_step(c2, opt, mesh, bp=bp > 1, dap=dap,
-                                       n_recycle=n_recycle)
+        step2, _ = make_af2_train_step(c2, opt, built, n_recycle=n_recycle)
         p2 = tree_shapes(lambda: af2.init_params(key, c2))
         o2 = tree_shapes(lambda: opt.init(jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype), p2)))

@@ -5,10 +5,14 @@ jax device state.  The physical mesh is (data, model) = (16, 16) per pod;
 multi-pod prepends a pod axis (2, 16, 16).  Logical views:
 
 * LM archs: 'model' = tensor/expert parallel, 'pod' folds into data-parallel.
-* AlphaFold2 + BP: 'model' -> ('branch', 'dap') = (2, 8) — the paper's
-  BP=2 x DAP hybrid (§4.3); 'pod'+'data' are the DP axes (batch 128..256).
+* AlphaFold2: the 'model' axis factors into ('branch', 'dap') according to a
+  ``repro.parallel.plan.ParallelPlan`` — ``plan.build(mesh)`` performs the
+  refactoring (the paper's BP=2 x DAP=8 hybrid, §4.3, is
+  ``ParallelPlan.for_mesh(mesh, branch=2, dap=8)``).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -21,8 +25,24 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def production_mesh_from_env(multi_pod: bool = False,
+                             env: str = "REPRO_DRYRUN_MESH"):
+    """Production mesh, overridable via e.g. REPRO_DRYRUN_MESH='4x4[x2]' for
+    the small-mesh self-test (tests/test_dryrun_small.py)."""
+    override = os.environ.get(env)
+    if override:
+        dims = tuple(int(x) for x in override.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):]
+        return jax.make_mesh(dims, axes)
+    return make_production_mesh(multi_pod=multi_pod)
+
+
 def af2_logical_mesh(mesh, *, bp: int = 2, dap: int = 8):
-    """(…, data, model) -> (…, data, branch, dap) with branch*dap = model."""
+    """(…, data, model) -> (…, data, branch, dap) with branch*dap = model.
+
+    Kept for direct use; ``ParallelPlan.build`` performs the same
+    refactoring as part of building the full execution plan.
+    """
     model = mesh.shape["model"]
     if bp * dap != model:
         raise ValueError(f"bp({bp}) * dap({dap}) != model axis ({model})")

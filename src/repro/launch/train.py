@@ -6,9 +6,15 @@ end-to-end validation.  Integrates: sharded data pipeline, checkpoint
 manager (atomic/keep-N/async + preemption save), straggler watchdog, and
 either the AF2 shard_map step (BP x DAP x DP) or the LM GSPMD step.
 
+The AF2 path is laid out by a ``repro.parallel.plan.ParallelPlan``: either
+explicit extents (``--bp/--dap/--pods``) or ``--auto-plan`` (roofline-driven
+DP x BP x DAP selection for the device count and batch).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --af2 tiny --steps 20 \
       --devices 8 --bp 2 --dap 2 --batch 8
+  PYTHONPATH=src python -m repro.launch.train --af2 small --steps 20 \
+      --devices 8 --auto-plan --batch 4
   PYTHONPATH=src python -m repro.launch.train --arch glm4-9b --smoke \
       --steps 20 --batch 8 --seq 128
 """
@@ -23,7 +29,7 @@ import time
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", help="assigned LM arch id")
-    ap.add_argument("--af2", choices=["tiny", "initial", "finetune"])
+    ap.add_argument("--af2", choices=["tiny", "small", "initial", "finetune"])
     ap.add_argument("--variant", default="parallel")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config (CPU-sized)")
@@ -34,10 +40,17 @@ def main():
                     help="fake host devices (CPU validation only)")
     ap.add_argument("--bp", type=int, default=1)
     ap.add_argument("--dap", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--auto-plan", action="store_true",
+                    help="pick the DP x BP x DAP split from the roofline "
+                         "cost model (overrides --bp/--dap)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--adapt-plan", action="store_true",
+                    help="allow --resume from a checkpoint written under a "
+                         "different ParallelPlan")
     ap.add_argument("--compress-pod-grads", action="store_true")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
@@ -61,7 +74,7 @@ def main():
 
 
 def run_af2(args, jax, jnp, np):
-    from repro.core.config import af2_tiny, af2_initial, af2_finetune
+    from repro.core.config import af2_tiny, af2_small, af2_initial, af2_finetune
     from repro.core import model as af2
     from repro.data.protein import protein_batch
     from repro.data.loader import ShardedLoader
@@ -69,31 +82,30 @@ def run_af2(args, jax, jnp, np):
     from repro.train.optim import adamw, af2_lr_schedule
     from repro.train.trainstep import make_af2_train_step
     from repro.parallel.grad_sync import zeros_error_state
+    from repro.parallel.plan import ParallelPlan, auto_plan
 
-    cfg = {"tiny": af2_tiny, "initial": af2_initial,
-           "finetune": af2_finetune}[args.af2](variant=args.variant)
+    cfg = {"tiny": af2_tiny, "small": af2_small, "initial": af2_initial,
+           "finetune": af2_finetune}[args.af2]()
     n_dev = len(jax.devices())
-    dp = max(1, n_dev // (args.bp * args.dap))
-    axes, shape = [], []
-    if dp > 1:
-        axes.append("data"); shape.append(dp)
-    if args.bp > 1:
-        axes.append("branch"); shape.append(args.bp)
-    if args.dap > 1:
-        axes.append("dap"); shape.append(args.dap)
-    if not axes:
-        axes, shape = ["data"], [1]
-    mesh = jax.make_mesh(tuple(shape), tuple(axes))
-    print(f"mesh: {dict(zip(axes, shape))}  devices={n_dev}")
+    if args.auto_plan:
+        plan = auto_plan(n_dev, cfg, global_batch=args.batch, pod=args.pods,
+                         variant=args.variant,
+                         compress_pod_grads=args.compress_pod_grads)
+    else:
+        plan = ParallelPlan.from_flags(
+            n_dev, bp=args.bp, dap=args.dap, pod=args.pods,
+            variant=args.variant,
+            compress_pod_grads=args.compress_pod_grads)
+    cfg = plan.apply_to(cfg)
 
     opt = adamw(af2_lr_schedule(args.lr, warmup_steps=100), clip_norm=0.1)
     params = af2.init_params(jax.random.PRNGKey(0), cfg)
     n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    step_fn, built = make_af2_train_step(
+        cfg, opt, plan, n_recycle=1, deterministic=False)
+    print(f"{plan.describe()}")
+    print(f"mesh: {dict(built.mesh.shape)}  devices={n_dev}")
     print(f"params: {n_params:,}")
-    step_fn, _ = make_af2_train_step(
-        cfg, opt, mesh, bp=args.bp > 1, dap=args.dap,
-        compress_pod_grads=args.compress_pod_grads,
-        n_recycle=1, deterministic=False)
     state = {"params": params, "opt": opt.init(params)}
     if args.compress_pod_grads:
         state["err"] = zeros_error_state(params)
@@ -101,10 +113,12 @@ def run_af2(args, jax, jnp, np):
     start = 0
     mgr = None
     if args.ckpt_dir:
-        mgr = CheckpointManager(args.ckpt_dir, keep=3, install_sigterm=True)
+        mgr = CheckpointManager(args.ckpt_dir, keep=3, install_sigterm=True,
+                                plan_meta=built.metadata())
         if args.resume:
             try:
-                state, start = mgr.restore_latest(state)
+                state, start = mgr.restore_latest(
+                    state, adapt_plan=args.adapt_plan)
                 print(f"resumed from step {start}")
             except FileNotFoundError:
                 pass

@@ -79,7 +79,7 @@ def bp_evoformer_block(p, cfg: EvoformerConfig, msa, z, *, rng=None,
 
 
 def bp_dap_evoformer_block(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
-                           deterministic: bool = True, n_seq_total: int,
+                           deterministic: bool = True, n_seq_total: int = None,
                            branch_axis: str = "branch", dap_axis: str = "dap"):
     """Hybrid BP x DAP block (paper §4.3, Table 6).
 

@@ -81,14 +81,24 @@ def dap_msa_branch(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
     return msa_l
 
 
-def dap_outer_product_mean(p, msa_l, n_seq_total: int, axis_name: str = AXIS,
+def dap_outer_product_mean(p, msa_l, n_seq_total: int = None,
+                           axis_name: str = AXIS,
                            row_chunk: int = 32, opm_impl: str = "fused"):
     """OPM with s-sharded MSA -> i-sharded pair update (r/d, r, c_z).
+
+    ``n_seq_total`` is the OPM mean denominator — the stack's TOTAL row
+    count.  The default (None) derives it from the local shard shape x the
+    dap extent, which is correct for every stack (the main Evoformer sees
+    n_seq rows, the extra-MSA stack n_extra_seq; a fixed cfg.n_seq would be
+    8x off on the extra stack at initial-training shapes).
 
     With ``opm_impl='fused'`` (the default) uses the fused row-chunked
     contraction (``evo.opm_contract``): even on the local i-shard the
     (r/d, r, c^2) outer tensor is never materialized.
     """
+    if n_seq_total is None:
+        from repro.parallel.mesh_utils import axis_extent
+        n_seq_total = msa_l.shape[0] * axis_extent(axis_name)
     h = nn.layernorm(p["ln"], msa_l)
     a = nn.dense(p["a"], h)                                    # (s/d, r, c)
     b = nn.dense(p["b"], h)
@@ -168,7 +178,7 @@ def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
 # ---------------------------------------------------------------------------
 
 def dap_evoformer_block(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
-                        deterministic: bool = True, n_seq_total: int,
+                        deterministic: bool = True, n_seq_total: int = None,
                         axis_name: str = AXIS):
     rngs = (None, None) if rng is None else tuple(jax.random.split(rng))
     opm = lambda m: dap_outer_product_mean(p["opm"], m, n_seq_total, axis_name,
@@ -207,7 +217,7 @@ def unshard_outputs(msa_l, z_l, axis_name: str = AXIS):
     return _all_gather(msa_l, axis_name, 0), _all_gather(z_l, axis_name, 0)
 
 
-def make_dap_block_fn(n_seq_total: int, axis_name: str = AXIS):
+def make_dap_block_fn(n_seq_total: int = None, axis_name: str = AXIS):
     """Adapter matching the ``block_fn`` signature of ``evoformer_stack``."""
     def block_fn(p, cfg, msa_l, z_l, *, rng=None, deterministic=True):
         return dap_evoformer_block(p, cfg, msa_l, z_l, rng=rng,

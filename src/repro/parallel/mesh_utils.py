@@ -69,12 +69,17 @@ def smap(f, mesh: Mesh, in_specs, out_specs):
                   out_specs=out_specs, check_rep=False)
 
 
+def axis_extent(axis_name: str) -> int:
+    """Static extent of a shard_map axis (works across jax versions)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    # older jax: psum of a python int folds to the static axis size
+    return jax.lax.psum(1, axis_name)
+
+
 def local_slice(x, axis_name: str, dim: int):
     """Inside shard_map: take this device's equal slice of ``x`` along ``dim``."""
-    if hasattr(jax.lax, "axis_size"):
-        n = jax.lax.axis_size(axis_name)
-    else:  # older jax: psum of a python int folds to the static axis size
-        n = jax.lax.psum(1, axis_name)
+    n = axis_extent(axis_name)
     idx = jax.lax.axis_index(axis_name)
     size = x.shape[dim] // n
     return jax.lax.dynamic_slice_in_dim(x, idx * size, size, dim)

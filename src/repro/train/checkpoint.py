@@ -60,7 +60,46 @@ def _decode(arr: np.ndarray, dtype: str, shape) -> np.ndarray:
     return arr.view(dt).reshape(shape)
 
 
-def save_checkpoint(directory, step: int, tree) -> pathlib.Path:
+class PlanMismatchError(ValueError):
+    """Checkpoint was written under a different ParallelPlan/mesh than the
+    one restoring it; the message lists the differing fields."""
+
+
+def _diff_meta(stored: dict, current: dict, prefix="") -> list:
+    out = []
+    for k in sorted(set(stored) | set(current)):
+        a, b = stored.get(k), current.get(k)
+        if isinstance(a, dict) and isinstance(b, dict):
+            out.extend(_diff_meta(a, b, prefix=f"{prefix}{k}."))
+        elif a != b:
+            out.append(f"{prefix}{k}: checkpoint={a!r} current={b!r}")
+    return out
+
+
+def check_plan_meta(stored: Optional[dict], current: Optional[dict], *,
+                    adapt: bool = False):
+    """Compare stored vs current plan metadata (see BuiltPlan.metadata).
+
+    Plan field mismatches are fatal unless ``adapt=True`` — silently
+    training on under a different BP/DAP/compression layout than the run
+    that wrote the checkpoint is almost never intended.  Mesh-fingerprint
+    mismatches alone (device count / topology) are always allowed: the
+    checkpoint format is mesh-agnostic and re-shards on restore (the
+    elastic-restart path)."""
+    if not stored or not current or adapt:
+        return
+    diffs = _diff_meta(stored.get("plan", {}), current.get("plan", {}))
+    if diffs:
+        raise PlanMismatchError(
+            "checkpoint was written under a different ParallelPlan:\n  "
+            + "\n  ".join(diffs)
+            + "\npass adapt_plan=True (launcher: --adapt-plan) to restore "
+            "anyway — arrays are mesh-agnostic and re-shard, but optimizer "
+            "dynamics and dropout streams may differ across layouts")
+
+
+def save_checkpoint(directory, step: int, tree, *,
+                    meta: Optional[dict] = None) -> pathlib.Path:
     directory = pathlib.Path(directory)
     directory.mkdir(parents=True, exist_ok=True)
     tmp = directory / f"tmp.{step}.{os.getpid()}"
@@ -78,6 +117,7 @@ def save_checkpoint(directory, step: int, tree) -> pathlib.Path:
         "dtypes": [str(a.dtype) for a in logical],
         "shapes": [list(a.shape) for a in logical],
         "time": time.time(),
+        "meta": meta or {},
     }
     with open(tmp / "manifest.json", "w") as f:
         json.dump(manifest, f)
@@ -98,17 +138,34 @@ def latest_step(directory) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def checkpoint_meta(directory, step: Optional[int] = None) -> dict:
+    """The ``meta`` dict recorded at save time (plan + mesh fingerprint)."""
+    directory = pathlib.Path(directory)
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    manifest = json.loads(
+        (directory / f"step_{step:010d}" / "manifest.json").read_text())
+    return manifest.get("meta", {})
+
+
 def restore_checkpoint(directory, tree_like, *, step: Optional[int] = None,
-                       shardings=None):
+                       shardings=None, expect_meta: Optional[dict] = None,
+                       adapt_plan: bool = False):
     """Restore into the structure of ``tree_like``; optionally re-shard each
     leaf with ``shardings`` (a matching pytree of Sharding) — this is the
-    elastic-reshape path: the checkpoint is mesh-agnostic."""
+    elastic-reshape path: the checkpoint is mesh-agnostic.
+
+    ``expect_meta`` (see ``BuiltPlan.metadata``) cross-checks the stored
+    ParallelPlan; a mismatch raises ``PlanMismatchError`` unless
+    ``adapt_plan=True``."""
     directory = pathlib.Path(directory)
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {directory}")
     path = directory / f"step_{step:010d}"
     manifest = json.loads((path / "manifest.json").read_text())
+    check_plan_meta(manifest.get("meta"), expect_meta, adapt=adapt_plan)
     data = np.load(path / "arrays.npz")
     names, leaves, treedef = _flatten_with_names(tree_like)
     if names != manifest["names"]:
@@ -131,10 +188,14 @@ class CheckpointManager:
     """Keep-N async checkpoint manager with preemption handling."""
 
     def __init__(self, directory, *, keep: int = 3, async_save: bool = True,
-                 install_sigterm: bool = False):
+                 install_sigterm: bool = False,
+                 plan_meta: Optional[dict] = None):
         self.directory = pathlib.Path(directory)
         self.keep = keep
         self.async_save = async_save
+        # BuiltPlan.metadata() of the run writing/reading these checkpoints:
+        # stamped into every save, cross-checked on every restore
+        self.plan_meta = plan_meta
         self._thread: Optional[threading.Thread] = None
         self._last_state = None
         self._lock = threading.Lock()
@@ -145,7 +206,8 @@ class CheckpointManager:
         with self._lock:
             if self._last_state is not None:
                 step, tree = self._last_state
-                save_checkpoint(self.directory, step, tree)
+                save_checkpoint(self.directory, step, tree,
+                                meta=self.plan_meta)
         raise SystemExit(143)
 
     def save(self, step: int, tree):
@@ -162,7 +224,7 @@ class CheckpointManager:
             self._save_and_gc(step, host_tree)
 
     def _save_and_gc(self, step, tree):
-        save_checkpoint(self.directory, step, tree)
+        save_checkpoint(self.directory, step, tree, meta=self.plan_meta)
         steps = sorted(int(m.group(1)) for p in self.directory.iterdir()
                        if (m := re.fullmatch(r"step_(\d+)", p.name)))
         for s in steps[:-self.keep]:
@@ -172,9 +234,12 @@ class CheckpointManager:
         if self._thread is not None and self._thread.is_alive():
             self._thread.join()
 
-    def restore_latest(self, tree_like, shardings=None):
+    def restore_latest(self, tree_like, shardings=None, *,
+                       adapt_plan: bool = False):
         return restore_checkpoint(self.directory, tree_like,
-                                  shardings=shardings)
+                                  shardings=shardings,
+                                  expect_meta=self.plan_meta,
+                                  adapt_plan=adapt_plan)
 
 
 class StepWatchdog:

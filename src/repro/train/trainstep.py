@@ -7,7 +7,9 @@ compute/gradient-reduce overlap by XLA's latency-hiding scheduler).
 
 AF2: one shard_map over the full logical mesh (pod, data, branch, dap) —
 explicit BP/DAP collectives inside, psum gradient reduction over (pod, data),
-optional int8 error-feedback compression on the pod hop (grad_sync).
+optional int8 error-feedback compression on the pod hop (grad_sync).  The
+entire layout (mesh axes, block_fn, stack_io, gradient reduction) comes from
+one ``repro.parallel.plan.ParallelPlan`` — no loose (bp, dap, ...) flags.
 """
 from __future__ import annotations
 
@@ -147,57 +149,46 @@ def _opt_branch_shardings(params_shapes, pspecs, branch_shapes, mesh):
 
 
 # ---------------------------------------------------------------------------
-# AF2 train step (shard_map over the full logical mesh)
+# AF2 train step (shard_map over the plan's logical mesh)
 # ---------------------------------------------------------------------------
 
-def make_af2_train_step(cfg, optimizer: Optimizer, mesh: Mesh, *,
-                        bp: bool = False, dap: int = 1,
-                        compress_pod_grads: bool = False,
-                        n_recycle: int = 1, deterministic: bool = True):
-    """Paper-faithful AF2 distributed training step.
+def make_af2_train_step(cfg, optimizer: Optimizer, plan, *,
+                        n_recycle: int = 1, deterministic: bool = True,
+                        devices=None):
+    """Paper-faithful AF2 distributed training step, laid out by a
+    ``ParallelPlan`` (repro.parallel.plan — the single source of truth for
+    mesh axes, block_fn, stack_io and gradient reduction).
 
-    mesh axes: optional 'pod', 'data', optional 'branch' (2), optional 'dap'.
-    Batch: (global_batch, ...) sharded over (pod, data); params replicated
-    (pure DP over 93M params, as in the paper); BP/DAP act inside the
-    per-protein computation; gradient psum over (pod, data) with optional
-    int8 error-feedback on the pod hop.
+    ``plan`` is a ``ParallelPlan`` (built here against ``devices``, default
+    all local devices) or an already-``BuiltPlan``.  Batch: (global_batch,
+    ...) sharded over the plan's DP axes; params replicated (pure DP over
+    93M params, as in the paper); BP/DAP act inside the per-protein
+    computation via the plan's block_fn/stack_io; gradient completion and
+    reduction via the plan's grad_sync (DESIGN.md §2).
+
+    Returns ``(train_step, built)`` — ``built.mesh`` / ``built.batch_spec``
+    are what launchers need for sharding and logging.
     """
     from repro.core import model as af2
-    from repro.parallel import branch as bp_lib
-    from repro.parallel import dap as dap_lib
-    from repro.parallel import grad_sync
     from repro.parallel.mesh_utils import smap
+    from repro.parallel.plan import BuiltPlan, ParallelPlan
 
-    axis_names = mesh.axis_names
-    dp_axes = tuple(a for a in ("pod", "data") if a in axis_names)
-    have_branch = "branch" in axis_names and bp
-    have_dap = "dap" in axis_names and dap > 1
-
-    def block_fn(p, c, m, z, rng=None, deterministic=True):
-        if have_branch and have_dap:
-            return bp_lib.bp_dap_evoformer_block(
-                p, c, m, z, rng=rng, deterministic=deterministic,
-                n_seq_total=cfg.n_seq)
-        if have_branch:
-            return bp_lib.bp_evoformer_block(p, c, m, z, rng=rng,
-                                             deterministic=deterministic)
-        if have_dap:
-            return dap_lib.dap_evoformer_block(
-                p, c, m, z, rng=rng, deterministic=deterministic,
-                n_seq_total=cfg.n_seq)
-        return None  # default serial block
-
-    use_block_fn = have_branch or have_dap
-
-    stack_io = None
-    if have_dap:
-        stack_io = (dap_lib.shard_inputs, dap_lib.unshard_outputs)
+    if isinstance(plan, ParallelPlan):
+        built = plan.build(devices, cfg=cfg)
+    elif isinstance(plan, BuiltPlan):
+        built = plan
+    else:
+        raise TypeError(
+            f"make_af2_train_step expects a ParallelPlan or BuiltPlan, got "
+            f"{type(plan).__name__}: construct one with ParallelPlan(...), "
+            "ParallelPlan.from_flags(...) or auto_plan(...)")
+    mesh, dp_axes = built.mesh, built.dp_axes
 
     def per_protein_loss(params, sample, rng):
         return af2.loss_fn(
             params, cfg, sample, n_recycle=n_recycle,
-            block_fn=block_fn if use_block_fn else None,
-            stack_io=stack_io, rng=rng, deterministic=deterministic)
+            block_fn=built.block_fn, stack_io=built.stack_io, rng=rng,
+            deterministic=deterministic)
 
     def step_body(state, batch, rng):
         params, opt, err = state["params"], state["opt"], state.get("err")
@@ -223,31 +214,10 @@ def make_af2_train_step(cfg, optimizer: Optimizer, mesh: Mesh, *,
 
         (loss, metrics), grads = jax.value_and_grad(
             local_loss, has_aux=True)(params)
-        # Gradient reduction semantics (see DESIGN.md §2):
-        # * Evoformer-stack param grads are PARTIAL across branch/dap devices
-        #   (each device backpropped only its cond arm / activation shard):
-        #   psum over (branch, dap) completes them — the paper's backward
-        #   Broadcast/AllReduce.
-        # * All other params (embedder/structure/heads) were computed on
-        #   replicated tensors -> grads already identical: leave them.
-        if have_branch or have_dap:
-            sync_axes = (("branch",) if have_branch else ()) + (
-                ("dap",) if have_dap else ())
-            grads = dict(grads)
-            for k in ("evoformer", "extra_stack"):
-                grads[k] = jax.lax.psum(grads[k], sync_axes)
-        # DP reduction: mean over (pod, data); optional int8 pod compression
-        if compress_pod_grads and "pod" in axis_names and err is not None:
-            inner = tuple(a for a in dp_axes if a != "pod")
-            if inner:
-                grads = jax.lax.pmean(grads, inner)
-            grads, err = grad_sync.compressed_psum_tree(grads, "pod", err)
-            npods = mesh.shape["pod"]
-            grads = jax.tree_util.tree_map(lambda g: g / npods, grads)
-        else:
-            grads = jax.lax.pmean(grads, dp_axes)
-        loss = jax.lax.pmean(loss, dp_axes)
-        metrics = jax.lax.pmean(metrics, dp_axes)
+        grads, err = built.grad_sync(grads, err)
+        if dp_axes:
+            loss = jax.lax.pmean(loss, dp_axes)
+            metrics = jax.lax.pmean(metrics, dp_axes)
         new_params, new_opt = optimizer.update(grads, opt, params)
         out = {"params": new_params, "opt": new_opt}
         if err is not None:
@@ -257,8 +227,7 @@ def make_af2_train_step(cfg, optimizer: Optimizer, mesh: Mesh, *,
         return out, metrics
 
     # shard_map wrapper: batch sharded over dp axes on dim 0, rest replicated
-    batch_spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
-    state_spec = P()  # params/opt replicated (93M params — paper's pure DP)
+    batch_spec, state_spec = built.batch_spec, built.state_spec
 
     def train_step(state, batch, rng):
         batch_specs = jax.tree_util.tree_map(lambda _: batch_spec, batch)
@@ -268,4 +237,4 @@ def make_af2_train_step(cfg, optimizer: Optimizer, mesh: Mesh, *,
                   out_specs=(state_specs, state_spec))
         return fn(state, batch, rng)
 
-    return train_step, batch_spec
+    return train_step, built

@@ -62,3 +62,48 @@ def test_sharded_loader_prefetch_order():
             break
     loader.close()
     assert seen == [(i, i) for i in range(5)]
+
+
+def test_sharded_loader_guards_concurrent_iteration():
+    """A second __iter__ while one is live would race two workers on one
+    queue; it must raise instead."""
+    import pytest
+    loader = ShardedLoader(lambda s: {"x": np.full((1,), s)})
+    it = iter(loader)
+    next(it)
+    with pytest.raises(RuntimeError, match="already being iterated"):
+        next(iter(loader))
+    loader.close()
+
+
+def test_sharded_loader_close_idempotent_and_reiterable():
+    loader = ShardedLoader(lambda s: {"x": np.full((1,), s)}, start_step=3)
+    first = [step for step, _ in zip_take(loader, 2)]
+    loader.close()
+    loader.close()                      # idempotent
+    second = [step for step, _ in zip_take(loader, 2)]
+    loader.close()
+    assert first == [3, 4] and second == [3, 4]  # restarts at start_step
+
+
+def test_sharded_loader_stale_iterator_cleanup_spares_new_iteration():
+    """A previous iteration's generator being finalized late (GC) must not
+    tear down the worker of a newer iteration."""
+    loader = ShardedLoader(lambda s: {"x": np.full((1,), s)})
+    it1 = iter(loader)
+    next(it1)
+    loader.close()
+    it2 = iter(loader)
+    assert next(it2)[0] == 0
+    it1.close()                         # late finalization of the old gen
+    assert next(it2)[0] == 1            # new iteration still alive
+    loader.close()
+
+
+def zip_take(loader, n):
+    out = []
+    for item in loader:
+        out.append(item)
+        if len(out) >= n:
+            break
+    return out

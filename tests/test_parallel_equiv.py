@@ -154,36 +154,62 @@ print("DAP evo_pallas fwd+grad ok")
 """, devices=2, timeout=560)
 
 
-def test_af2_train_step_dp_vs_bp():
+def test_af2_train_step_plan_matrix_vs_oracle():
+    """Satellite of the ParallelPlan refactor: serial-DP / BP / DAP / hybrid
+    plans (plus the auto_plan pick) all produce the same losses and updated
+    params as the single-device oracle, through make_af2_train_step.  Also
+    pins the extra-MSA OPM denominator fix: n_extra_seq != n_seq here, so a
+    block_fn hard-coding cfg.n_seq would diverge under DAP."""
     run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.config import af2_tiny
 from repro.core import model as af2
-from repro.train.optim import adamw
+from repro.parallel.plan import ParallelPlan, auto_plan
+from repro.train.optim import sgd
 from repro.train.trainstep import make_af2_train_step
 from repro.data.protein import protein_batch
+from tests.util import randomize
 
 cfg = af2_tiny(variant="parallel", n_evoformer=1, n_extra_msa_blocks=1,
-               n_res=8, n_seq=4, n_extra_seq=6, remat="none")
-opt = adamw(1e-3, clip_norm=0.1)
-params = af2.init_params(jax.random.PRNGKey(0), cfg)
+               n_res=8, n_seq=4, n_extra_seq=12, remat="none")
+# randomize: AF2's residual outputs are zero-init, which would make the OPM
+# denominator (and most of the block) invisible to the forward pass; SGD
+# makes the post-step param delta proportional to the gradient, so the
+# params comparison IS the grads comparison
+opt = sgd(0.1)
+params = randomize(af2.init_params(jax.random.PRNGKey(0), cfg),
+                   jax.random.PRNGKey(7))
 batch = protein_batch(0, 0, 8, cfg)
 
-def run(shape, axes, bp, dap):
-    mesh = jax.make_mesh(shape, axes)
-    ts, _ = make_af2_train_step(cfg, opt, mesh, bp=bp, dap=dap, n_recycle=1)
+def run(plan):
+    ts, built = make_af2_train_step(
+        cfg, opt, plan, n_recycle=1,
+        devices=jax.devices()[:plan.n_devices])
     state = {"params": params, "opt": opt.init(params)}
     state, m = jax.jit(ts)(state, batch, jax.random.PRNGKey(0))
     return float(m["loss"]), state
 
-l_dp, s_dp = run((8,), ("data",), False, 1)
-l_bp, s_bp = run((4, 2), ("data", "branch"), True, 1)
-np.testing.assert_allclose(l_dp, l_bp, rtol=2e-3, atol=2e-3)
-for a, b in zip(jax.tree_util.tree_leaves(s_dp["params"]),
-                jax.tree_util.tree_leaves(s_bp["params"])):
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2, atol=2e-3)
-print("af2 step dp==bp ok", l_dp, l_bp)
-""", timeout=560)
+l_ref, s_ref = run(ParallelPlan())                       # 1-device oracle
+auto = auto_plan(8, cfg, global_batch=4)
+assert auto.group > 1            # 8 devices, batch 4 forces a 2-device group
+plans = {
+    "dp8":    ParallelPlan(data=8),
+    "dap":    ParallelPlan(data=4, dap=2),
+    "hybrid": ParallelPlan(data=2, branch=2, dap=2),
+    # the roofline pick for this scenario (BP at small shapes) runs too:
+    "auto":   auto,
+}
+assert (auto.branch, auto.dap) == (2, 1)  # covers the BP row of the matrix
+for name, plan in plans.items():
+    l, s = run(plan)
+    np.testing.assert_allclose(l_ref, l, rtol=2e-3, atol=2e-3,
+                               err_msg=name)
+    for a, b in zip(jax.tree_util.tree_leaves(s_ref["params"]),
+                    jax.tree_util.tree_leaves(s["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-2, atol=2e-3, err_msg=name)
+    print(f"plan {name} == oracle ok ({plan.describe()})")
+""", timeout=1100)
 
 
 def test_grad_compression_error_feedback():
