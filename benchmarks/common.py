@@ -14,9 +14,15 @@ import time
 
 import jax
 
-DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN_DIR = REPO_ROOT / "experiments" / "dryrun"
+KERNEL_JSON = REPO_ROOT / "BENCH_kernels.json"
 
 ROWS: list[tuple] = []
+# machine-readable kernel rows (op, shape, impl, ms, bytes) accumulated by
+# the kernel_bench suites and written to BENCH_kernels.json by run.py — the
+# perf trajectory subsequent PRs diff against
+KERNEL_ROWS: list[dict] = []
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -37,6 +43,24 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
 def emit(name: str, us_per_call: float, derived: str = ""):
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def emit_kernel(op: str, shape: str, impl: str, seconds: float,
+                bytes_: int = 0, derived: str = ""):
+    """CSV line + a structured BENCH_kernels.json row.
+
+    ``bytes_`` is the op's materialized-intermediate footprint (0 = fully
+    fused) — the memory story alongside the timing.  CPU ms are structural
+    (interpret-mode Pallas is a correctness harness, not a speed claim)."""
+    KERNEL_ROWS.append({"op": op, "shape": shape, "impl": impl,
+                        "ms": round(seconds * 1e3, 4), "bytes": int(bytes_)})
+    emit(f"kernels/{op}_{impl}_{shape}", seconds * 1e6, derived)
+
+
+def write_kernel_json(path=KERNEL_JSON) -> None:
+    """Dump the structured kernel rows (sorted, stable for git diffs)."""
+    rows = sorted(KERNEL_ROWS, key=lambda r: (r["op"], r["shape"], r["impl"]))
+    path.write_text(json.dumps(rows, indent=1) + "\n")
 
 
 def load_dryrun(pattern: str) -> list[dict]:

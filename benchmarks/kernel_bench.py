@@ -1,12 +1,19 @@
 """Kernel micro-benchmarks: Pallas(interpret) is a CORRECTNESS harness on
 CPU — the meaningful CPU numbers are chunked-vs-reference XLA paths; Pallas
-TPU timing comes from the roofline model (see EXPERIMENTS.md §Perf)."""
+TPU timing comes from the roofline model (see EXPERIMENTS.md §Perf).
+
+Every suite records structured rows (op, shape, impl, ms, bytes) via
+``common.emit_kernel``; ``benchmarks.run`` dumps them to BENCH_kernels.json
+at the repo root — the machine-readable perf trajectory subsequent PRs diff
+against.  ``bytes`` is the impl's materialized-intermediate footprint
+(0 = fully fused).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit_kernel, timeit
 from repro.nn.attention import attention_chunked, attention_reference
 
 
@@ -18,12 +25,12 @@ def attention_paths():
     v = jax.random.normal(ks[2], (b, s, kv, d), jnp.float32)
     t_ref = timeit(jax.jit(lambda q, k, v: attention_reference(
         q, k, v, causal=True)), q, k, v)
-    emit("kernels/attn_reference_512", t_ref * 1e6, "")
+    emit_kernel("lm_attn", f"s{s}", "reference", t_ref, b * h * s * s * 4)
     for chunk in (64, 128, 256):
         t = timeit(jax.jit(lambda q, k, v: attention_chunked(
             q, k, v, causal=True, chunk_size=chunk)), q, k, v)
-        emit(f"kernels/attn_chunked_{chunk}", t * 1e6,
-             f"vs_ref={t_ref / t - 1:+.1%}")
+        emit_kernel("lm_attn", f"s{s}", f"chunked{chunk}", t,
+                    b * h * s * chunk * 4, f"vs_ref={t_ref / t - 1:+.1%}")
 
 
 def evoformer_attention_paths():
@@ -33,12 +40,12 @@ def evoformer_attention_paths():
     interpret-mode — a correctness/trajectory harness, not a speed claim;
     on TPU the identical call lowers to Mosaic."""
     from repro.kernels import ops as kops
-    from repro.nn.attention import attention_reference
     L, s, h, c = 8, 128, 4, 32
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
     q, k, v, gate = (jax.random.normal(kk, (L, s, h, c), jnp.float32)
                      for kk in ks[:4])
     bias = jax.random.normal(ks[4], (h, s, s), jnp.float32)
+    shape = f"L{L}s{s}"
 
     def gated(attn_out, g):
         # g must be the traced jit parameter, not the closed-over array —
@@ -47,20 +54,20 @@ def evoformer_attention_paths():
 
     t_ref = timeit(jax.jit(lambda q, k, v, b, g: gated(
         attention_reference(q, k, v, bias=b), g)), q, k, v, bias, gate)
-    emit("kernels/evo_attn_reference_128", t_ref * 1e6, "")
+    emit_kernel("evo_attn", shape, "reference", t_ref, L * h * s * s * 4)
     for chunk in (32, 64):
         t = timeit(jax.jit(lambda q, k, v, b, g, ch=chunk: gated(
             attention_chunked(q, k, v, bias=b, chunk_size=ch), g)),
             q, k, v, bias, gate)
-        emit(f"kernels/evo_attn_chunked_{chunk}", t * 1e6,
-             f"vs_ref={t_ref / t - 1:+.1%}")
+        emit_kernel("evo_attn", shape, f"chunked{chunk}", t,
+                    L * h * s * chunk * 4, f"vs_ref={t_ref / t - 1:+.1%}")
     t_pal = timeit(jax.jit(kops.evo_attention), q, k, v, bias, gate)
-    emit("kernels/evo_attn_pallas_fused_128", t_pal * 1e6,
-         "interpret_on_cpu;mosaic_on_tpu")
+    emit_kernel("evo_attn", shape, "pallas", t_pal, 0,
+                "interpret_on_cpu;mosaic_on_tpu")
     t_bwd = timeit(jax.jit(jax.grad(
         lambda q: kops.evo_attention(q, k, v, bias, gate).sum())), q)
-    emit("kernels/evo_attn_pallas_flash_bwd_128", t_bwd * 1e6,
-         "flash_backward;no_chunked_recompute")
+    emit_kernel("evo_attn_bwd", shape, "pallas", t_bwd, 0,
+                "flash_backward;no_chunked_recompute")
 
 
 def opm_paths():
@@ -72,14 +79,55 @@ def opm_paths():
     msa = jax.random.normal(jax.random.PRNGKey(1), (s, r, c_m), jnp.float32)
     t_naive = timeit(jax.jit(lambda p, m: evo.outer_product_mean(p, m)),
                      p, msa)
-    emit("kernels/opm_naive_r64", t_naive * 1e6,
-         f"intermediate={r * r * c_opm * c_opm * 4 / 1e6:.1f}MB")
+    emit_kernel("opm", f"r{r}", "naive", t_naive, r * r * c_opm * c_opm * 4)
     for rc in (8, 16, 32):
         t = timeit(jax.jit(lambda p, m, rc=rc: evo.outer_product_mean_fused(
             p, m, row_chunk=rc)), p, msa)
-        emit(f"kernels/opm_fused_rc{rc}", t * 1e6,
-             f"vs_naive={t_naive / t - 1:+.1%};"
-             f"peak={rc * r * c_opm * c_opm * 4 / 1e6:.1f}MB")
+        emit_kernel("opm", f"r{r}", f"fused_rc{rc}", t,
+                    rc * r * c_opm * c_opm * 4,
+                    f"vs_naive={t_naive / t - 1:+.1%}")
+
+
+def triangle_mult_paths():
+    """Triangle-multiplicative update (the pair-stack hot path this repo's
+    PR 3 fuses): reference vs i/k-chunked online accumulation vs the fused
+    Pallas kernel (interpret mode on CPU), fwd and fwd+bwd.  ``bytes`` =
+    the (r, r, 2c) gated-projection pair (reference), the fp32 slab
+    accumulator (chunked), or 0 (pallas: nothing between the LN'd input and
+    the gated output touches HBM)."""
+    import dataclasses
+    from repro.core import evoformer as evo
+    from repro.core.config import af2_tiny
+
+    r, c_z, c = 64, 32, 32
+    p = evo.triangle_mult_init(jax.random.PRNGKey(0), c_z, c)
+    # out-proj weights are zero-init: randomize so nothing constant-folds
+    p = jax.tree_util.tree_map(
+        lambda l: l + 0.02 * jax.random.normal(jax.random.PRNGKey(7),
+                                               l.shape, l.dtype), p)
+    z = jax.random.normal(jax.random.PRNGKey(1), (r, r, c_z), jnp.float32)
+    base = af2_tiny().evoformer
+    chunk = 16
+    footprint = {"reference": r * r * 2 * c * 4,
+                 "chunked": chunk * r * c * 4,
+                 "pallas": 0}
+    times = {}
+    for impl in ("reference", "chunked", "pallas"):
+        cfg = dataclasses.replace(base, tri_mult_impl=impl,
+                                  tri_mult_chunk=chunk)
+        fwd = jax.jit(lambda p, z, cfg=cfg: evo.tri_mult_apply(
+            p, cfg, z, outgoing=True))
+        times[impl] = t = timeit(fwd, p, z)
+        note = ("" if impl == "reference" else
+                f"vs_ref={times['reference'] / t - 1:+.1%}")
+        if impl == "pallas":
+            note += ";interpret_on_cpu;mosaic_on_tpu"
+        emit_kernel("tri_mult", f"r{r}", impl, t, footprint[impl], note)
+        t_bwd = timeit(jax.jit(jax.grad(
+            lambda z, cfg=cfg: evo.tri_mult_apply(
+                p, cfg, z, outgoing=True).sum())), z)
+        emit_kernel("tri_mult_bwd", f"r{r}", impl, t_bwd, footprint[impl],
+                    "pallas_native_vjp" if impl == "pallas" else "")
 
 
 def ssd_paths():
@@ -93,12 +141,13 @@ def ssd_paths():
     C = jax.random.normal(ks[4], (t, n))
     D = jnp.ones((h,))
     t_ref = timeit(jax.jit(lambda *a: ssd_reference(*a)), x, dt, A, B, C, D)
-    emit("kernels/ssd_recurrence_1k", t_ref * 1e6, "")
+    emit_kernel("ssd", f"t{t}", "recurrence", t_ref, 0)
     for chunk in (64, 256):
         tt = timeit(jax.jit(lambda *a: ssd_chunked(*a, chunk=chunk)),
                     x, dt, A, B, C, D)
-        emit(f"kernels/ssd_chunked_{chunk}", tt * 1e6,
-             f"speedup_vs_scan={t_ref / tt:.1f}x")
+        emit_kernel("ssd", f"t{t}", f"chunked{chunk}", tt, 0,
+                    f"speedup_vs_scan={t_ref / tt:.1f}x")
 
 
-ALL = [attention_paths, evoformer_attention_paths, opm_paths, ssd_paths]
+ALL = [attention_paths, evoformer_attention_paths, opm_paths,
+       triangle_mult_paths, ssd_paths]

@@ -18,6 +18,13 @@ def main() -> None:
             failed.append((fn.__name__, e))
             print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    from benchmarks import common
+    if common.KERNEL_ROWS and not failed:
+        # only a fully-green run may overwrite the committed trajectory —
+        # a partial row set would read as kernels regressing out of existence
+        common.write_kernel_json()
+        print(f"# wrote {len(common.KERNEL_ROWS)} rows to "
+              f"{common.KERNEL_JSON}", file=sys.stderr)
     if failed:
         raise SystemExit(f"{len(failed)} benchmark(s) failed: "
                          f"{[n for n, _ in failed]}")

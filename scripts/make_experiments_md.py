@@ -387,6 +387,14 @@ The fused outer-product mean (`opm_impl='fused'`, default) contracts
 row-chunks of the outer product directly against the output projection; the
 (r, r, c_opm^2) intermediate never exists (jaxpr-verified in
 tests/test_analysis.py).
+
+The triangle multiplicative update — the last heavyweight pair-stack op —
+has the same three-way selection (`tri_mult_impl`, DESIGN.md §9):
+`reference` (fp32-accumulating oracle), `chunked` (i-slab x k-chunk online
+accumulation + per-slab epilogue, default; no (r, r, 2c) gated-projection
+pair, jaxpr-verified) and `pallas` (one kernel from the gated projections
+through the output gate, custom-VJP Pallas backward; interpret on CPU,
+Mosaic on TPU; `BENCH_kernels.json` rows `tri_mult_*` track all three).
 """
 
 PAPER_CLAIMS = """

@@ -22,3 +22,10 @@ python -m pytest -x -q
 echo "== tier-1b: multi-device (8 fake host devices) =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   python -m pytest -x -q tests/test_plan.py
+
+# tier-1c: the interpret-mode Pallas kernel tier (marker: pallas_interpret).
+# These also run in the main pass; this explicit tier exists so kernel
+# correctness can be re-checked in isolation (and fast) after kernel-only
+# changes: ./scripts/run_tier1.sh -m pallas_interpret
+echo "== tier-1c: Pallas interpret-mode kernel tier =="
+python -m pytest -x -q -m pallas_interpret

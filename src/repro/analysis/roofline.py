@@ -97,6 +97,49 @@ def active_params(cfg) -> float:
 # repro.parallel.plan.auto_plan and benchmarks/paper_tables.py (DESIGN.md §2)
 # ---------------------------------------------------------------------------
 
+def tri_mult_flops(cfg) -> float:
+    """Fwd FLOPs of the two triangle-multiplicative updates of one block:
+    gated a/b projections + output gate (~3 z->c_mul-sized GEMMs), the
+    r-contraction, and the output projection."""
+    e = cfg.evoformer
+    r, z, c_mul = cfg.n_res, e.c_z, e.c_hidden_mul
+    return 2 * (2 * r * r * z * c_mul * 3 + 2 * r ** 3 * c_mul +
+                2 * r * r * c_mul * z)
+
+
+def tri_mult_hbm_bytes(cfg, impl: str = None, *, dap: int = 1,
+                       elt: int = 2) -> float:
+    """Per-device fwd HBM bytes of the two triangle mults of one block, by
+    ``tri_mult_impl`` (None = the config's).  Coarse activation-traffic
+    counts (weights and cache effects ignored), ``area`` = this device's
+    (r/dap)·r output positions:
+
+    * ``reference``: the LN'd input round-trips for 5 projections, the
+      (r, r, 2c) gated pair + the pre-gate output + epilogue tensors all
+      write+read HBM — ~(8·c_z + 6·c_mul) elements per position;
+    * ``chunked``: the gated pair never materializes, but the fp32 slab
+      accumulator re-round-trips once per k-chunk;
+    * ``pallas``: only the LN'd input (the xb operand streamed once per
+      i-block row), the gate source and the output touch HBM — the kernel's
+      arithmetic intensity is what ``auto_plan`` sees.
+    """
+    e = cfg.evoformer
+    impl = impl or e.tri_mult_impl
+    r, z, c_mul = cfg.n_res, e.c_z, e.c_hidden_mul
+    area = (r // max(dap, 1)) * r
+    if impl == "reference":
+        per_op = elt * area * (8 * z + 6 * c_mul)
+    elif impl == "chunked":
+        n_k = -(-r // max(1, e.tri_mult_chunk))
+        per_op = elt * area * 6 * z + 4 * area * c_mul * 2 * n_k
+    elif impl == "pallas":
+        n_i = -(-r // min(r, 128))        # xb streamed once per i-block
+        per_op = elt * area * z * (3 + n_i)
+    else:
+        raise ValueError(f"unknown tri_mult impl {impl!r}")
+    return 2.0 * per_op
+
+
 def evo_branch_flops(cfg) -> tuple:
     """(msa_branch + OPM, pair_branch) fwd FLOPs for one main-Evoformer block.
 
@@ -113,9 +156,7 @@ def evo_branch_flops(cfg) -> tuple:
            2 * r * r * s * e.c_hidden_opm ** 2 +
            2 * r * r * e.c_hidden_opm ** 2 * z)
     msa_branch = row + col + mtrans + opm
-    c_mul = e.c_hidden_mul
-    tri_mul = 2 * (2 * r * r * z * c_mul * 3 + 2 * r ** 3 * c_mul +
-                   2 * r * r * c_mul * z)
+    tri_mul = tri_mult_flops(cfg)
     hp = e.n_head_pair * e.c_hidden_pair_att
     tri_att = 2 * (2 * r * r * z * hp * 4 + 2 * r ** 3 * hp * 2)
     ptrans = 2 * r * r * z * 4 * z * 2
@@ -174,6 +215,13 @@ def estimate_block_time(cfg, *, bp: int = 1, dap: int = 1, hw: HW = HW(),
       one fused psum whose payload shrinks 1/dap under the hybrid;
     * BP=2 runs the two branches concurrently: time is the max branch.
 
+    The pair branch additionally carries the triangle-mult HBM term
+    (``tri_mult_hbm_bytes``, keyed on ``cfg.evoformer.tri_mult_impl``):
+    the op's intensity differs ~4x between the reference and the fused
+    Pallas path, and at fine-tune shapes the pair branch is what bounds the
+    block — this is how ``auto_plan`` sees a kernel-impl change.  Memory is
+    overlapped with compute (``max``), the classic roofline composition.
+
     ``fwd_bwd`` scales compute x3 and communication x2 (backward re-runs the
     collective schedule once; matmul backward is ~2x forward FLOPs)."""
     f_msa, f_pair = evo_branch_flops(cfg)
@@ -181,7 +229,8 @@ def estimate_block_time(cfg, *, bp: int = 1, dap: int = 1, hw: HW = HW(),
     eff_msa = min(1.0, (cfg.n_seq / d) / hw.tile_rows)
     eff_pair = min(1.0, (cfg.n_res / d) / hw.tile_rows)
     t_msa = f_msa / d / (hw.peak_flops * eff_msa)
-    t_pair = f_pair / d / (hw.peak_flops * eff_pair)
+    t_pair = max(f_pair / d / (hw.peak_flops * eff_pair),
+                 tri_mult_hbm_bytes(cfg, dap=d) / hw.hbm_bw)
     b_msa, b_pair = dap_comm_bytes(cfg, d)
     kc, kb = (3.0, 2.0) if fwd_bwd else (1.0, 1.0)
     a_msa = (_N_DAP_COLLECTIVES_MSA * hw.coll_launch) if d > 1 else 0.0

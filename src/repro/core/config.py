@@ -28,6 +28,13 @@ class EvoformerConfig:
     # (r, r, c_opm^2) outer-product tensor is never materialized) | 'naive'
     opm_impl: str = "fused"
     opm_chunk: int = 32               # residue rows per fused-OPM chunk
+    # triangle multiplicative update (Algorithms 11/12):
+    # 'reference' (naive XLA, fp32-accumulating oracle) | 'chunked' (i/k-
+    # chunked online accumulation + per-slab epilogue: no (r, r, 2·c_mul)
+    # gated-projection pair, any backend) | 'pallas' (fully fused kernel,
+    # interpret on CPU / Mosaic on TPU)
+    tri_mult_impl: str = "chunked"
+    tri_mult_chunk: int = 64          # i/k slab extent of the chunked impl
 
 
 @dataclasses.dataclass(frozen=True)

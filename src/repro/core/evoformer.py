@@ -264,16 +264,135 @@ def triangle_mult_init(key, c_z: int, c_hidden: int) -> Params:
 
 
 def triangle_mult(p: Params, z: jnp.ndarray, *, outgoing: bool) -> jnp.ndarray:
+    """Reference (oracle) triangle-multiplicative update.
+
+    The k-contraction accumulates in fp32 (``preferred_element_type``): under
+    the AMP policy a/b are bf16 and a bf16 accumulation over r >= 128 terms
+    loses ~half the mantissa — the reference must stay a valid numerical
+    oracle for the chunked/Pallas impls (pinned by tests/test_triangle.py).
+    """
     x = nn.layernorm(p["ln_in"], z)
     a = jax.nn.sigmoid(nn.dense(p["a_gate"], x)) * nn.dense(p["a"], x)
     b = jax.nn.sigmoid(nn.dense(p["b_gate"], x)) * nn.dense(p["b"], x)
     if outgoing:
-        o = jnp.einsum("ikc,jkc->ijc", a, b)   # 'outgoing' edges
+        o = jnp.einsum("ikc,jkc->ijc", a, b,   # 'outgoing' edges
+                       preferred_element_type=jnp.float32)
     else:
-        o = jnp.einsum("kic,kjc->ijc", a, b)   # 'incoming' edges
+        o = jnp.einsum("kic,kjc->ijc", a, b,   # 'incoming' edges
+                       preferred_element_type=jnp.float32)
     o = nn.dense(p["out"], nn.layernorm(p["ln_out"], o.astype(z.dtype)))
     g = jax.nn.sigmoid(nn.dense(p["gate"], x))
     return (g * o).astype(z.dtype)
+
+
+def _tri_mult_packed_weights(p: Params):
+    """[value | gate] packing of the a/b projections for the Pallas kernel."""
+    w_a = jnp.concatenate([p["a"]["w"], p["a_gate"]["w"]], axis=1)
+    b_a = jnp.concatenate([p["a"]["b"], p["a_gate"]["b"]])
+    w_b = jnp.concatenate([p["b"]["w"], p["b_gate"]["w"]], axis=1)
+    b_b = jnp.concatenate([p["b"]["b"], p["b_gate"]["b"]])
+    return w_a, b_a, w_b, b_b
+
+
+def triangle_mult_fused(p: Params, xa: jnp.ndarray, xb: jnp.ndarray,
+                        xg: jnp.ndarray, *, impl: str, chunk: int = 64,
+                        out_dtype=None) -> jnp.ndarray:
+    """Fused triangle-mult core shared by the serial and DAP paths.
+
+    Operands are already LN'd and oriented so that
+    ``o[i,j,c] = sum_k a(xa[i,k])·b(xb[j,k])`` covers both edge directions
+    (incoming = outgoing on the transposed rep) and DAP row-sharding
+    (xa/xg row-sharded, xb gathered — see ``parallel.dap.dap_triangle_mult``).
+
+    impl='pallas': the Pallas kernel (``kernels.triangle``) — nothing
+    between xa/xb and the gated output touches HBM.  impl='chunked': XLA
+    fallback for the CPU dry-run backend; i-rows are processed in ``chunk``
+    slabs, each running a k-chunked fp32 online accumulation followed
+    immediately by its out-LN/out-proj/gate epilogue — neither the
+    (r, r, 2·c_hidden) gated-projection pair nor any full-size pre-gate
+    tensor is ever materialized (jaxpr-pinned by tests/test_triangle.py).
+    """
+    out_dtype = out_dtype or xg.dtype
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        w_a, b_a, w_b, b_b = _tri_mult_packed_weights(p)
+        y = kops.triangle_mult(xa, xb, xg, w_a, b_a, w_b, b_b,
+                               p["ln_out"]["scale"], p["ln_out"]["bias"],
+                               p["out"]["w"], p["out"]["b"],
+                               p["gate"]["w"], p["gate"]["b"])
+        return y.astype(out_dtype)
+    if impl != "chunked":
+        raise ValueError(f"unknown tri_mult impl {impl!r}")
+
+    r_i, r_k, _ = xa.shape
+    kc = max(1, min(chunk, r_k))
+    ic = max(1, min(chunk, r_i))
+    kpad, ipad = (-r_k) % kc, (-r_i) % ic
+    n_k = (r_k + kpad) // kc
+    pad_k = lambda t: (jnp.pad(t, ((0, 0), (0, kpad), (0, 0)))
+                       if kpad else t)
+    # padded k columns project to sigmoid(b_gate)*b_val != 0: mask them out
+    k_valid = (jnp.arange(n_k * kc).reshape(n_k, kc) < r_k)[..., None]
+
+    def gated(pa, pg, t):
+        return jax.nn.sigmoid(nn.dense(pg, t)) * nn.dense(pa, t)
+
+    xb_k = jnp.moveaxis(pad_k(xb).reshape(xb.shape[0], n_k, kc, -1), 1, 0)
+
+    xa_p = pad_k(xa)
+    xg_p = xg
+    if ipad:
+        xa_p = jnp.pad(xa_p, ((0, ipad), (0, 0), (0, 0)))
+        xg_p = jnp.pad(xg, ((0, ipad), (0, 0), (0, 0)))
+    n_i = (r_i + ipad) // ic
+    xa_c = xa_p.reshape(n_i, ic, r_k + kpad, xa.shape[2])
+    xg_c = xg_p.reshape(n_i, ic, *xg.shape[1:])
+
+    def one_row_slab(inp):
+        xa_s, xg_s = inp                                  # (ic, r_k+p, c_z)
+        xa_k = jnp.moveaxis(xa_s.reshape(ic, n_k, kc, -1), 1, 0)
+
+        def k_step(acc, kin):
+            xak, xbk, valid = kin
+            a = gated(p["a"], p["a_gate"], xak) * valid   # (ic, kc, c)
+            b = gated(p["b"], p["b_gate"], xbk)           # (r_j, kc, c)
+            return acc + jnp.einsum("ikc,jkc->ijc", a, b,
+                                    preferred_element_type=jnp.float32), None
+
+        c_hidden = p["a"]["w"].shape[1]
+        acc0 = jnp.zeros((ic, xb.shape[0], c_hidden), jnp.float32)
+        acc, _ = jax.lax.scan(k_step, acc0, (xa_k, xb_k, k_valid))
+        o = nn.dense(p["out"], nn.layernorm(p["ln_out"],
+                                            acc.astype(out_dtype)))
+        g = jax.nn.sigmoid(nn.dense(p["gate"], xg_s))
+        return (g * o).astype(out_dtype)
+
+    out = jax.lax.map(one_row_slab, (xa_c, xg_c))         # (n_i, ic, r_j, z)
+    return out.reshape(-1, *out.shape[2:])[:r_i]
+
+
+def tri_mult_supported(r_i: int, r_j: int, r_k: int) -> bool:
+    """Whether the Pallas triangle kernel tiles these extents efficiently
+    (same power-of-two-divisor criterion as the attention kernel)."""
+    from repro.kernels.flash_attention import evo_supported
+    return all(evo_supported(n) for n in (r_i, r_j, r_k))
+
+
+def tri_mult_apply(p: Params, cfg: EvoformerConfig, z: jnp.ndarray, *,
+                   outgoing: bool) -> jnp.ndarray:
+    """Triangle-mult dispatch on ``cfg.tri_mult_impl``
+    ('reference' | 'chunked' | 'pallas')."""
+    impl = cfg.tri_mult_impl
+    if impl == "pallas" and not tri_mult_supported(*z.shape[:2], z.shape[0]):
+        impl = "chunked"  # poorly factorable r: near-rowwise tiles — fall back
+    if impl == "reference":
+        return triangle_mult(p, z, outgoing=outgoing)
+    if impl not in ("chunked", "pallas"):
+        raise ValueError(f"unknown tri_mult impl {impl!r}")
+    x = nn.layernorm(p["ln_in"], z)
+    xab = x if outgoing else x.swapaxes(0, 1)
+    return triangle_mult_fused(p, xab, xab, x, impl=impl,
+                               chunk=cfg.tri_mult_chunk, out_dtype=z.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -338,8 +457,8 @@ def pair_branch(p: Params, cfg: EvoformerConfig, z: jnp.ndarray, *, rng=None,
         return shared_dropout(k, x, cfg.dropout_pair, shared_axis=shared_axis,
                               deterministic=deterministic)
 
-    z = z + drop(0, triangle_mult(p["tri_mul_out"], z, outgoing=True), 0)
-    z = z + drop(1, triangle_mult(p["tri_mul_in"], z, outgoing=False), 0)
+    z = z + drop(0, tri_mult_apply(p["tri_mul_out"], cfg, z, outgoing=True), 0)
+    z = z + drop(1, tri_mult_apply(p["tri_mul_in"], cfg, z, outgoing=False), 0)
     z = z + drop(2, gated_attention(p["tri_att_start"], z, n_head=cfg.n_head_pair,
                                     c_hidden=cfg.c_hidden_pair_att,
                                     bias_input=z, **kw), 0)

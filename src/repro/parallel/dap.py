@@ -120,20 +120,54 @@ def dap_outer_product_mean(p, msa_l, n_seq_total: int = None,
 # Pair branch under DAP
 # ---------------------------------------------------------------------------
 
-def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS):
+def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS,
+                      impl: str = "reference", chunk: int = 64):
+    """Triangle mult on an i-sharded pair rep (z_l (r/d, r, c_z)).
+
+    impl='reference' keeps the original schedule (project locally, gather /
+    re-shard the PROJECTED operands).  The fused impls ('chunked'/'pallas')
+    instead gather the LN'd pair rep itself and hand the kernel the
+    DAP-oriented operand triple — the gathered tensor is (r, r, c_z) instead
+    of (r, r, c_mul) (identical bytes at paper shapes, c_z == c_mul == 128),
+    and the projections happen inside the fused core on the gathered rows,
+    so the kernel runs unchanged on row-sharded tiles (DESIGN.md §9).
+    """
+    if impl not in ("reference", "chunked", "pallas"):
+        raise ValueError(f"unknown tri_mult impl {impl!r}")
+    if impl in ("chunked", "pallas"):
+        x_l = nn.layernorm(p["ln_in"], z_l)                    # (r/d, r, cz)
+        x_full = _all_gather(x_l, axis_name, axis=0)           # (r, r, cz)
+        if outgoing:
+            # out[i_l, j] = sum_k a(x[i_l, k]) b(x[j, k])
+            xa, xb = x_l, x_full
+        else:
+            # out[i_l, j] = sum_k a(x[k, i_l]) b(x[k, j]): the gathered rep
+            # already holds every element — slice this device's i-columns
+            # out of it locally (no extra all_to_all) and transpose both
+            lo = jax.lax.axis_index(axis_name) * z_l.shape[0]
+            xa = jax.lax.dynamic_slice_in_dim(
+                x_full, lo, z_l.shape[0], axis=1).swapaxes(0, 1)
+            xb = x_full.swapaxes(0, 1)
+        if impl == "pallas" and not evo.tri_mult_supported(
+                xa.shape[0], xb.shape[0], xa.shape[1]):
+            impl = "chunked"
+        return evo.triangle_mult_fused(p, xa, xb, x_l, impl=impl,
+                                       chunk=chunk, out_dtype=z_l.dtype)
     x = nn.layernorm(p["ln_in"], z_l)
     a = jax.nn.sigmoid(nn.dense(p["a_gate"], x)) * nn.dense(p["a"], x)
     b = jax.nn.sigmoid(nn.dense(p["b_gate"], x)) * nn.dense(p["b"], x)
     if outgoing:
         # out[i_l, j] = sum_k a[i_l, k] b[j, k]: gather b rows
         b_full = _all_gather(b, axis_name, axis=0)             # (r, r, c)
-        o = jnp.einsum("ikc,jkc->ijc", a, b_full)
+        o = jnp.einsum("ikc,jkc->ijc", a, b_full,
+                       preferred_element_type=jnp.float32)
     else:
         # out[i_l, j] = sum_k a[k, i_l] b[k, j]: k is the sharded axis ->
         # re-shard a to (k, i_l), gather b to (k, r)
         a_col = _transpose_shards(a, axis_name)                # (r, r/d, c)
         b_full = _all_gather(b, axis_name, axis=0)             # (r, r, c)
-        o = jnp.einsum("kic,kjc->ijc", a_col, b_full)
+        o = jnp.einsum("kic,kjc->ijc", a_col, b_full,
+                       preferred_element_type=jnp.float32)
     o = nn.dense(p["out"], nn.layernorm(p["ln_out"], o.astype(z_l.dtype)))
     g = jax.nn.sigmoid(nn.dense(p["gate"], x))
     return (g * o).astype(z_l.dtype)
@@ -151,10 +185,12 @@ def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
         return evo.shared_dropout(k, x, cfg.dropout_pair, shared_axis=shared_axis,
                                   deterministic=deterministic)
 
-    z_l = z_l + drop(0, dap_triangle_mult(p["tri_mul_out"], z_l, outgoing=True,
-                                          axis_name=axis_name), 0)
-    z_l = z_l + drop(1, dap_triangle_mult(p["tri_mul_in"], z_l, outgoing=False,
-                                          axis_name=axis_name), 0)
+    tri_kw = dict(axis_name=axis_name, impl=cfg.tri_mult_impl,
+                  chunk=cfg.tri_mult_chunk)
+    z_l = z_l + drop(0, dap_triangle_mult(p["tri_mul_out"], z_l,
+                                          outgoing=True, **tri_kw), 0)
+    z_l = z_l + drop(1, dap_triangle_mult(p["tri_mul_in"], z_l,
+                                          outgoing=False, **tri_kw), 0)
     # starting-node attention: rows local, bias gathered
     bias = _all_gather(evo.project_attention_bias(p["tri_att_start"], z_l),
                        axis_name, axis=1)                      # (h, r, r)

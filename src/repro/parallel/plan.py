@@ -9,7 +9,7 @@ names one point of that matrix:
     pod x data        data-parallel extents (gradient pmean axes)
     branch            Branch Parallelism extent (1 or 2, paper §4.2)
     dap               Dynamic Axial Parallelism extent (FastFold, §3.2)
-    variant / attention_impl / opm_impl / remat
+    variant / attention_impl / opm_impl / tri_mult_impl / remat
                       Evoformer implementation choices (None = keep cfg's)
     compress_pod_grads int8 error-feedback on the cross-pod gradient hop
 
@@ -33,6 +33,7 @@ from typing import Optional, Sequence
 _VARIANTS = ("af2", "multimer", "parallel")
 _ATTENTION_IMPLS = ("reference", "chunked", "pallas", "evo_pallas")
 _OPM_IMPLS = ("fused", "naive")
+_TRI_MULT_IMPLS = ("reference", "chunked", "pallas")
 _REMATS = ("none", "block", "dots")
 
 # params whose gradients are PARTIAL across branch/dap devices and need the
@@ -60,6 +61,7 @@ class ParallelPlan:
     variant: Optional[str] = None
     attention_impl: Optional[str] = None
     opm_impl: Optional[str] = None
+    tri_mult_impl: Optional[str] = None
     remat: Optional[str] = None
     compress_pod_grads: bool = False
 
@@ -80,7 +82,8 @@ class ParallelPlan:
                     else "")]
         parts.append(f"bp={self.branch}")
         parts.append(f"dap={self.dap}")
-        for k in ("variant", "attention_impl", "opm_impl", "remat"):
+        for k in ("variant", "attention_impl", "opm_impl", "tri_mult_impl",
+                  "remat"):
             v = getattr(self, k)
             if v is not None:
                 parts.append(f"{k}={v}")
@@ -121,7 +124,8 @@ class ParallelPlan:
         evo_over = {k: v for k, v in (
             ("variant", self.variant),
             ("attention_impl", self.attention_impl),
-            ("opm_impl", self.opm_impl)) if v is not None}
+            ("opm_impl", self.opm_impl),
+            ("tri_mult_impl", self.tri_mult_impl)) if v is not None}
         over = {}
         if evo_over:
             over["evoformer"] = dataclasses.replace(cfg.evoformer, **evo_over)
@@ -157,6 +161,7 @@ class ParallelPlan:
         for field, allowed in (("variant", _VARIANTS),
                                ("attention_impl", _ATTENTION_IMPLS),
                                ("opm_impl", _OPM_IMPLS),
+                               ("tri_mult_impl", _TRI_MULT_IMPLS),
                                ("remat", _REMATS)):
             v = getattr(self, field)
             if v is not None and v not in allowed:

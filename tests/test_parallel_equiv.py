@@ -198,6 +198,10 @@ plans = {
     "hybrid": ParallelPlan(data=2, branch=2, dap=2),
     # the roofline pick for this scenario (BP at small shapes) runs too:
     "auto":   auto,
+    # Pallas triangle-mult kernel under DAP row-sharding (the cfg default is
+    # 'chunked', so the 'dap' plan above covers that impl; this one pins the
+    # fused kernel against the same single-device chunked oracle)
+    "dap_tri_pallas": ParallelPlan(data=4, dap=2, tri_mult_impl="pallas"),
 }
 assert (auto.branch, auto.dap) == (2, 1)  # covers the BP row of the matrix
 for name, plan in plans.items():

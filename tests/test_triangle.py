@@ -1,0 +1,264 @@
+"""Triangle-multiplicative update: chunked + Pallas impls vs the fp32
+reference (acceptance: fwd 1e-5 / grads 1e-4 at r in {64, 128}), jaxpr
+memory bounds, bf16-accumulation pin, and impl dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import evoformer as evo
+from repro.core.config import af2_tiny
+from repro.nn import layers as nn
+from tests.util import max_eqn_elems, randomize
+
+pallas_interpret = pytest.mark.pallas_interpret
+
+
+def _cfg(impl, chunk=64):
+    return dataclasses.replace(af2_tiny().evoformer, tri_mult_impl=impl,
+                               tri_mult_chunk=chunk)
+
+
+def _setup(r, c_z=16, c=16, seed=0):
+    p = randomize(evo.triangle_mult_init(jax.random.PRNGKey(seed), c_z, c),
+                  jax.random.PRNGKey(7))
+    z = jax.random.normal(jax.random.PRNGKey(1), (r, r, c_z))
+    return p, z
+
+
+def _grads(p, cfg, z, outgoing):
+    w = jnp.cos(jnp.arange(z.shape[-1]))  # non-uniform cotangent
+
+    def loss(p, z):
+        return (evo.tri_mult_apply(p, cfg, z, outgoing=outgoing) * w).sum()
+
+    return jax.jit(jax.grad(loss, argnums=(0, 1)))(p, z)
+
+
+def _assert_impl_matches(impl, r, chunk=64, fwd_tol=1e-5, grad_tol=1e-4):
+    p, z = _setup(r)
+    for outgoing in (True, False):
+        ref = evo.tri_mult_apply(p, _cfg("reference"), z, outgoing=outgoing)
+        out = jax.jit(lambda p, z: evo.tri_mult_apply(
+            p, _cfg(impl, chunk), z, outgoing=outgoing))(p, z)
+        np.testing.assert_allclose(np.asarray(ref), np.asarray(out),
+                                   rtol=fwd_tol, atol=fwd_tol,
+                                   err_msg=f"{impl} fwd outgoing={outgoing}")
+        gp_r, gz_r = _grads(p, _cfg("reference"), z, outgoing)
+        gp, gz = _grads(p, _cfg(impl, chunk), z, outgoing)
+        np.testing.assert_allclose(np.asarray(gz_r), np.asarray(gz),
+                                   rtol=grad_tol, atol=grad_tol,
+                                   err_msg=f"{impl} dz outgoing={outgoing}")
+        for (path, a), (_, b) in zip(
+                jax.tree_util.tree_leaves_with_path(gp_r),
+                jax.tree_util.tree_leaves_with_path(gp)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=grad_tol, atol=grad_tol,
+                err_msg=f"{impl} d{jax.tree_util.keystr(path)} "
+                        f"outgoing={outgoing}")
+
+
+@pytest.mark.parametrize("r", [64, 128])
+def test_chunked_matches_reference(r):
+    _assert_impl_matches("chunked", r)
+
+
+def test_chunked_non_dividing_chunk():
+    """Padded k columns project through non-zero biases — they must be
+    masked out, not silently summed (48 % 20 != 0 exercises both pads)."""
+    _assert_impl_matches("chunked", 48, chunk=20)
+
+
+@pallas_interpret
+@pytest.mark.parametrize("r", [64, 128])
+def test_pallas_matches_reference(r):
+    _assert_impl_matches("pallas", r)
+
+
+@pallas_interpret
+def test_pallas_residual_fwd_consistent():
+    """Residual-mode forward (what the custom_vjp saves) must agree with the
+    plain forward and emit the true fp32 pre-LN contraction."""
+    from repro.kernels import triangle as tk
+    r, c_z, c = 32, 8, 12
+    p, z = _setup(r, c_z, c)
+    x = nn.layernorm(p["ln_in"], z)
+    w_a, b_a, w_b, b_b = evo._tri_mult_packed_weights(p)
+    args = (x, x, x, w_a, b_a, w_b, b_b, p["ln_out"]["scale"],
+            p["ln_out"]["bias"], p["out"]["w"], p["out"]["b"],
+            p["gate"]["w"], p["gate"]["b"])
+    out0 = tk.triangle_mult_fwd(*args)
+    out1, s = tk.triangle_mult_fwd(*args, return_residuals=True)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(out1))
+    a = jax.nn.sigmoid(nn.dense(p["a_gate"], x)) * nn.dense(p["a"], x)
+    b = jax.nn.sigmoid(nn.dense(p["b_gate"], x)) * nn.dense(p["b"], x)
+    s_ref = jnp.einsum("ikc,jkc->ijc", a, b,
+                       preferred_element_type=jnp.float32)
+    assert s.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pallas_interpret
+def test_pallas_rectangular_dap_shapes():
+    """The kernel's DAP contract: rectangular (r_i, r_k) x (r_j, r_k)
+    operands (a row shard vs the gathered rep) match the dense einsum."""
+    from repro.kernels import ops as kops
+    ri, rj, rk, c_z, c = 4, 16, 16, 6, 10
+    p, _ = _setup(rj, c_z, c)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    xa = jax.random.normal(ks[0], (ri, rk, c_z))
+    xb = jax.random.normal(ks[1], (rj, rk, c_z))
+    xg = jax.random.normal(ks[2], (ri, rj, c_z))
+    w_a, b_a, w_b, b_b = evo._tri_mult_packed_weights(p)
+
+    def ref(xa, xb, xg):
+        a = jax.nn.sigmoid(nn.dense(p["a_gate"], xa)) * nn.dense(p["a"], xa)
+        b = jax.nn.sigmoid(nn.dense(p["b_gate"], xb)) * nn.dense(p["b"], xb)
+        o = jnp.einsum("ikc,jkc->ijc", a, b,
+                       preferred_element_type=jnp.float32)
+        o = nn.dense(p["out"], nn.layernorm(p["ln_out"], o))
+        return jax.nn.sigmoid(nn.dense(p["gate"], xg)) * o
+
+    fused = lambda xa, xb, xg: kops.triangle_mult(
+        xa, xb, xg, w_a, b_a, w_b, b_b, p["ln_out"]["scale"],
+        p["ln_out"]["bias"], p["out"]["w"], p["out"]["b"],
+        p["gate"]["w"], p["gate"]["b"])
+    np.testing.assert_allclose(np.asarray(ref(xa, xb, xg)),
+                               np.asarray(fused(xa, xb, xg)),
+                               rtol=1e-5, atol=1e-5)
+    g1 = jax.grad(lambda *a: ref(*a).sum(), argnums=(0, 1, 2))(xa, xb, xg)
+    g2 = jax.grad(lambda *a: fused(*a).sum(), argnums=(0, 1, 2))(xa, xb, xg)
+    for name, a, b in zip("xa xb xg".split(), g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4, err_msg=f"d{name}")
+
+
+@pallas_interpret
+def test_pallas_falls_back_on_unaligned_lengths():
+    """r with a tiny power-of-two divisor (10) must silently take the
+    chunked path — same numbers, no degenerate tiling."""
+    p, _ = _setup(16)
+    z = jax.random.normal(jax.random.PRNGKey(5), (10, 10, 16))
+    out_p = evo.tri_mult_apply(p, _cfg("pallas"), z, outgoing=True)
+    out_r = evo.tri_mult_apply(p, _cfg("reference"), z, outgoing=True)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_unknown_impl_rejected():
+    p, z = _setup(16)
+    with pytest.raises(ValueError, match="tri_mult"):
+        evo.tri_mult_apply(p, _cfg("fused2"), z, outgoing=True)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: fp32 accumulation in the reference under the AMP policy
+# ---------------------------------------------------------------------------
+
+def test_reference_contraction_accumulates_fp32_under_bf16():
+    """Under the AMP policy a/b are bf16; the r-contraction must request
+    fp32 accumulation (a bf16 sum over r >= 128 terms has ulp ~1 at
+    magnitude ~r) or the reference is no oracle.  Pinned structurally: the
+    jaxpr's k-contraction dot_general must emit fp32."""
+    r, c_z, c = 128, 16, 16
+    p, z = _setup(r, c_z, c)
+    p16 = nn.BF16.cast(p)
+    z16 = z.astype(jnp.bfloat16)
+    for outgoing in (True, False):
+        jaxpr = jax.make_jaxpr(lambda p, z: evo.triangle_mult(
+            p, z, outgoing=outgoing))(p16, z16)
+        contractions = []
+        for eqn in jaxpr.jaxpr.eqns:
+            if eqn.primitive.name != "dot_general":
+                continue
+            (lhs_c, _), _ = eqn.params["dimension_numbers"]
+            lhs_shape = eqn.invars[0].aval.shape
+            if any(lhs_shape[d] == r for d in lhs_c):
+                contractions.append(eqn)
+        assert contractions, "detector: no r-contraction dot_general found"
+        for eqn in contractions:
+            assert eqn.outvars[0].aval.dtype == jnp.float32, (
+                f"k-contraction accumulates in {eqn.outvars[0].aval.dtype}, "
+                "not fp32 (outgoing={outgoing})")
+    # and the bf16 output stays close to the fp32 oracle
+    ref32 = evo.triangle_mult(p, z, outgoing=True)
+    out16 = evo.triangle_mult(p16, z16, outgoing=True)
+    np.testing.assert_allclose(np.asarray(ref32),
+                               np.asarray(out16, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: jaxpr memory bound for the chunked path
+# ---------------------------------------------------------------------------
+
+def test_chunked_materializes_no_gated_projection_pair():
+    """Acceptance check: the chunked path must not create ANY intermediate
+    as large as even ONE full (r, r, c_hidden) gated-projection tensor
+    (a fortiori not the (r, r, 2c) pair) — per-slab epilogue included, the
+    largest things alive are the (r, r, c_z) input/output and chunk slabs."""
+    r, c_z, c, chunk = 32, 8, 32, 8
+    p, _ = _setup(r, c_z, c)
+    z = jax.random.normal(jax.random.PRNGKey(2), (r, r, c_z))
+    one_proj = r * r * c
+
+    ref_peak = max_eqn_elems(jax.make_jaxpr(
+        lambda z: evo.triangle_mult(p, z, outgoing=True))(z))
+    assert ref_peak >= one_proj, "detector sanity: reference must hit it"
+
+    cfg = _cfg("chunked", chunk)
+    for outgoing in (True, False):
+        peak = max_eqn_elems(jax.make_jaxpr(
+            lambda z: evo.tri_mult_apply(p, cfg, z,
+                                         outgoing=outgoing))(z))
+        assert peak < one_proj, (
+            f"chunked tri-mult materialized {peak} elems >= a full "
+            f"(r, r, c_hidden) projection tensor ({one_proj})")
+        # nothing beyond the input/output rep and the per-slab accumulator
+        assert peak <= max(r * r * c_z, chunk * r * c)
+
+
+def test_chunked_backward_also_bounded():
+    """The VJP of the chunked path must not reintroduce the (r, r, 2c)
+    gated-projection pair.  The largest allowed intermediate is the stacked
+    fp32 contraction residual (r, r, c) — the same residual the Pallas
+    custom_vjp saves; its recompute would cost a second O(r^3) pass."""
+    r, c_z, c, chunk = 32, 8, 32, 8
+    p, _ = _setup(r, c_z, c)
+    z = jax.random.normal(jax.random.PRNGKey(2), (r, r, c_z))
+    cfg = _cfg("chunked", chunk)
+    peak = max_eqn_elems(jax.make_jaxpr(jax.grad(
+        lambda z: evo.tri_mult_apply(p, cfg, z, outgoing=True).sum()))(z))
+    assert peak <= r * r * c, peak
+    assert peak < r * r * 2 * c, peak
+
+
+# ---------------------------------------------------------------------------
+# Block-level integration: all impls interchangeable inside pair_branch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["chunked", "pallas"])
+def test_pair_branch_impl_equivalence(impl):
+    """Forward + parameter gradients of the whole pair branch match the
+    reference impl (marked pallas case runs in the tier-1c interpret tier
+    too via test_pallas_matches_reference; this pins the block wiring)."""
+    cfg_r = _cfg("reference")
+    cfg_x = _cfg(impl, chunk=8)
+    blk = randomize(evo.evoformer_block_init(jax.random.PRNGKey(0), cfg_r),
+                    jax.random.PRNGKey(11))
+    z = jax.random.normal(jax.random.PRNGKey(1), (16, 16, cfg_r.c_z))
+    z1 = jax.jit(lambda p, z: evo.pair_branch(p, cfg_r, z))(blk, z)
+    z2 = jax.jit(lambda p, z: evo.pair_branch(p, cfg_x, z))(blk, z)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2),
+                               rtol=2e-5, atol=2e-5)
+    w = jnp.sin(jnp.arange(cfg_r.c_z))
+    g1 = jax.jit(jax.grad(lambda p: (evo.pair_branch(p, cfg_r, z) * w).sum()))(blk)
+    g2 = jax.jit(jax.grad(lambda p: (evo.pair_branch(p, cfg_x, z) * w).sum()))(blk)
+    for (path, a), (_, b) in zip(jax.tree_util.tree_leaves_with_path(g1),
+                                 jax.tree_util.tree_leaves_with_path(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=jax.tree_util.keystr(path))
