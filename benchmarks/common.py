@@ -17,12 +17,17 @@ import jax
 REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 DRYRUN_DIR = REPO_ROOT / "experiments" / "dryrun"
 KERNEL_JSON = REPO_ROOT / "BENCH_kernels.json"
+SERVE_JSON = REPO_ROOT / "BENCH_serve.json"
 
 ROWS: list[tuple] = []
 # machine-readable kernel rows (op, shape, impl, ms, bytes) accumulated by
 # the kernel_bench suites and written to BENCH_kernels.json by run.py — the
 # perf trajectory subsequent PRs diff against
 KERNEL_ROWS: list[dict] = []
+# fold-serving rows (scenario, plan, buckets, latency/throughput/compiles)
+# accumulated by fold_bench and written to BENCH_serve.json by run.py under
+# the same only-green gating as the kernel trajectory
+SERVE_ROWS: list[dict] = []
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -60,6 +65,20 @@ def emit_kernel(op: str, shape: str, impl: str, seconds: float,
 def write_kernel_json(path=KERNEL_JSON) -> None:
     """Dump the structured kernel rows (sorted, stable for git diffs)."""
     rows = sorted(KERNEL_ROWS, key=lambda r: (r["op"], r["shape"], r["impl"]))
+    path.write_text(json.dumps(rows, indent=1) + "\n")
+
+
+def emit_serve(scenario: str, row: dict):
+    """One fold-serving row: CSV echo + a structured BENCH_serve.json row."""
+    SERVE_ROWS.append(dict(scenario=scenario, **row))
+    ms = row.get("mean_step_ms", 0.0)
+    emit(f"serve/{scenario}", ms * 1e3,
+         f"folds_per_s={row.get('folds_per_s', 0):.3f};"
+         f"compiles={row.get('compiles', 0)}")
+
+
+def write_serve_json(path=SERVE_JSON) -> None:
+    rows = sorted(SERVE_ROWS, key=lambda r: r["scenario"])
     path.write_text(json.dumps(rows, indent=1) + "\n")
 
 

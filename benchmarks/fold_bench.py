@@ -1,0 +1,106 @@
+"""Fold-serving benchmarks: FoldEngine latency / throughput / compile count.
+
+CPU-scale engine runs over the tiny config (absolute times are structural,
+not TPU claims — see benchmarks/common.py); each scenario emits a structured
+row to BENCH_serve.json (only written by a fully-green benchmarks/run.py):
+
+* ``fold_mixed_queue`` — mixed-length queue over a 2-bucket table: pins the
+  serving contract (compiles <= buckets used) and measures batched fold
+  latency/throughput.
+* ``fold_adaptive_recycle`` — same queue with an early-exit tolerance:
+  measures the recycle budget the adaptive scheduler actually spends
+  (ParaFold's scheduling-bound serving claim, quantified).
+* ``fold_long_dap`` (derived) — analytical long-protein route: roofline
+  block time per dap extent at fine-tune shapes, the quantity the engine's
+  plan table trades against replication.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit_serve
+
+
+def _tiny_engine(tol: float, max_recycle: int, micro_batch: int = 2):
+    from repro.core.config import af2_tiny
+    from repro.core import model as af2
+    from repro.serve.fold_engine import FoldEngine
+    from repro.serve.fold_steps import Bucket
+
+    cfg = af2_tiny()
+    params = af2.init_params(jax.random.PRNGKey(0), cfg)
+    buckets = [Bucket(8, 4, 6), Bucket(16, 8, 12)]
+    return cfg, FoldEngine(cfg, params, buckets=buckets,
+                           micro_batch=micro_batch, max_recycle=max_recycle,
+                           tol=tol)
+
+
+def _mixed_requests(cfg, n: int):
+    from repro.launch.serve import make_fold_requests
+    return make_fold_requests(cfg, n, seed=0)
+
+
+def fold_mixed_queue():
+    cfg, eng = _tiny_engine(tol=0.0, max_recycle=2)
+    reqs = _mixed_requests(cfg, 6)
+    # warmup compiles both buckets OUTSIDE the timed region; the emitted
+    # stats are deltas over the timed run only (cumulative engine counters
+    # would fold the warmup in and break requests/steps ratios)
+    eng.run(reqs[:2])
+    warm_compiles, warm_steps = eng.compile_misses, eng.stats["steps"]
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    lat = [r.latency_s for r in done.values()]
+    emit_serve("fold_mixed_queue", {
+        "requests": len(done),
+        "buckets": len(eng.buckets),
+        "compiles": eng.compile_misses,
+        "steps": eng.stats["steps"] - warm_steps,
+        "mean_step_ms": round(1e3 * sum(lat) / len(lat), 2),
+        "folds_per_s": round(len(done) / dt, 4),
+        "recompiled_after_warmup": eng.compile_misses != warm_compiles,
+    })
+
+
+def fold_adaptive_recycle():
+    cfg, eng = _tiny_engine(tol=0.05, max_recycle=4)
+    reqs = _mixed_requests(cfg, 6)
+    eng.run(reqs[:2])                      # warmup: compile outside timing
+    warm = dict(eng.stats)
+    t0 = time.perf_counter()
+    done = eng.run(reqs)
+    dt = time.perf_counter() - t0
+    run = eng.stats["recycles_run"] - warm["recycles_run"]
+    budget = eng.stats["recycles_budget"] - warm["recycles_budget"]
+    emit_serve("fold_adaptive_recycle", {
+        "requests": len(done),
+        "tol": 0.05,
+        "max_recycle": 4,
+        "recycles_run": run,
+        "recycles_budget": budget,
+        "recycles_saved_frac": round(1 - run / max(budget, 1), 4),
+        "compiles": eng.compile_misses,
+        "mean_step_ms": round(
+            1e3 * sum(r.latency_s for r in done.values()) / len(done), 2),
+        "folds_per_s": round(len(done) / dt, 4),
+    })
+
+
+def fold_long_dap_derived():
+    """Analytical long-protein route: per-block roofline time vs dap extent
+    at fine-tune shapes — the trade the engine's plan table encodes."""
+    from repro.analysis.roofline import estimate_block_time
+    from repro.core.config import af2_finetune
+    cfg = af2_finetune()
+    row = {"shape": f"r{cfg.n_res}_s{cfg.n_seq}", "compiles": 0,
+           "mean_step_ms": 0.0, "folds_per_s": 0.0}
+    for dap in (1, 2, 4, 8):
+        t = estimate_block_time(cfg, bp=1, dap=dap)
+        row[f"block_ms_dap{dap}"] = round(t * 1e3, 3)
+    emit_serve("fold_long_dap_derived", row)
+
+
+ALL = [fold_mixed_queue, fold_adaptive_recycle, fold_long_dap_derived]

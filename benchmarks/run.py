@@ -5,8 +5,8 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import paper_tables, kernel_bench
-    suites = paper_tables.ALL + kernel_bench.ALL
+    from benchmarks import paper_tables, kernel_bench, fold_bench
+    suites = paper_tables.ALL + kernel_bench.ALL + fold_bench.ALL
     if len(sys.argv) > 1:
         wanted = set(sys.argv[1:])
         suites = [f for f in suites if f.__name__ in wanted]
@@ -20,11 +20,16 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
     from benchmarks import common
     if common.KERNEL_ROWS and not failed:
-        # only a fully-green run may overwrite the committed trajectory —
+        # only a fully-green run may overwrite the committed trajectories —
         # a partial row set would read as kernels regressing out of existence
         common.write_kernel_json()
         print(f"# wrote {len(common.KERNEL_ROWS)} rows to "
               f"{common.KERNEL_JSON}", file=sys.stderr)
+    if common.SERVE_ROWS and not failed:
+        # same only-green gating for the fold-serving trajectory
+        common.write_serve_json()
+        print(f"# wrote {len(common.SERVE_ROWS)} rows to "
+              f"{common.SERVE_JSON}", file=sys.stderr)
     if failed:
         raise SystemExit(f"{len(failed)} benchmark(s) failed: "
                          f"{[n for n, _ in failed]}")

@@ -122,9 +122,42 @@ def main():
 
     doc.append(perf_section())
     doc.append(ATTENTION_IMPLS)
+    doc.append(serve_section())
     doc.append(PAPER_CLAIMS)
     (ROOT / "EXPERIMENTS.md").write_text("\n".join(doc))
     print("wrote EXPERIMENTS.md")
+
+
+def serve_section():
+    """Fold-serving rows from BENCH_serve.json (benchmarks/fold_bench.py,
+    written only by a fully-green benchmarks/run.py)."""
+    out = [SERVING_PREAMBLE]
+    path = ROOT / "BENCH_serve.json"
+    if not path.exists():
+        out.append("\n(no BENCH_serve.json yet — run `python -m "
+                   "benchmarks.run`)\n")
+        return "\n".join(out)
+    rows = json.loads(path.read_text())
+    out.append("| scenario | key numbers |")
+    out.append("|---|---|")
+    for r in rows:
+        keys = ", ".join(f"{k}={v}" for k, v in r.items() if k != "scenario")
+        out.append(f"| {r['scenario']} | {keys} |")
+    return "\n".join(out)
+
+
+SERVING_PREAMBLE = """
+## §Fold serving (FoldEngine)
+
+The serving half of the reproduction (DESIGN.md §10): `FoldEngine` pads a
+mixed-length request queue onto a fixed bucket table (compiles bounded by
+the table — pinned by a jit-cache-miss counter test), micro-batches each
+bucket through `core.model.predict`'s adaptive early-exit recycling
+(converged samples freeze inside the batch), and routes long buckets
+through dap-sharded inference plans (`ParallelPlan.for_inference`).
+CPU-scale numbers are structural; `fold_long_dap_derived` carries the
+roofline block-time trade the plan table encodes at fine-tune shapes.
+"""
 
 
 def _row(rec):

@@ -29,3 +29,10 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
 # changes: ./scripts/run_tier1.sh -m pallas_interpret
 echo "== tier-1c: Pallas interpret-mode kernel tier =="
 python -m pytest -x -q -m pallas_interpret
+
+# tier-1d: the serving tier (marker: serve) — FoldEngine scheduler, bucketed
+# compile cache, predict() early-exit recycling, padded-bucket equivalence.
+# Also in the main pass; standalone so serving regressions can be re-checked
+# in isolation after serve/-only changes: ./scripts/run_tier1.sh -m serve
+echo "== tier-1d: serving tier (FoldEngine / predict) =="
+python -m pytest -x -q -m serve

@@ -12,7 +12,7 @@ Batching is vmapped at the model level (paper: 1 protein per device).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +22,28 @@ from repro.nn.attention import attention
 from repro.nn import layers as nn
 
 Params = dict
+
+
+class EvoMasks(NamedTuple):
+    """Validity masks for a padded protein (inference buckets, DESIGN.md §10).
+
+    ``rows`` (s,): valid MSA rows of THIS stack (main vs extra differ);
+    ``res`` (r,): valid residues.  1.0 = real, 0.0 = bucket padding.  A
+    NamedTuple so it crosses jit/vmap boundaries as a pytree; ``None``
+    anywhere means "everything valid" (the training path pays zero cost).
+    """
+    rows: jnp.ndarray
+    res: jnp.ndarray
+
+
+def mask_bias(key_mask: jnp.ndarray) -> jnp.ndarray:
+    """(S,) validity -> (S,) additive attention bias: 0 valid / -1e9 padded.
+
+    Folded into the (h, S, S) pair bias so EVERY attention impl — reference,
+    chunked, pallas, evo_pallas — masks padded keys through the one code path
+    it already has (the fused kernels take the bias add in-kernel; no masked
+    kernel variants needed)."""
+    return (key_mask.astype(jnp.float32) - 1.0) * 1e9
 
 
 # ---------------------------------------------------------------------------
@@ -71,12 +93,15 @@ def project_attention_bias(p: Params, bias_input: jnp.ndarray) -> jnp.ndarray:
 def gated_attention(p: Params, x: jnp.ndarray, *, n_head: int, c_hidden: int,
                     bias_input: Optional[jnp.ndarray] = None,
                     bias: Optional[jnp.ndarray] = None,
+                    key_mask: Optional[jnp.ndarray] = None,
                     attention_impl: str = "chunked",
                     attention_chunk: int = 256) -> jnp.ndarray:
     """x: (..., L, S, c) — attention along S independently for each leading L.
 
     ``bias_input`` projects a pair rep to the bias internally; alternatively a
     precomputed ``bias`` (h, S, S) can be passed (DAP gathers it sharded).
+    ``key_mask`` (S,) marks valid keys (padded-bucket inference): it is folded
+    into the additive bias, so all impls (incl. the fused kernels) honor it.
     """
     h = nn.layernorm(p["ln"], x)
     *lead, s, _ = x.shape
@@ -86,6 +111,12 @@ def gated_attention(p: Params, x: jnp.ndarray, *, n_head: int, c_hidden: int,
     if bias_input is not None:
         assert bias is None
         bias = project_attention_bias(p, bias_input)       # (h, S, S)
+    if key_mask is not None:
+        mb = mask_bias(key_mask)                           # (S,) 0 / -1e9
+        base = 0.0 if bias is None else bias.astype(jnp.float32)
+        # materialize (h, S, S): the Pallas kernels require an exact-shape
+        # bias operand, and the chunked path T-chunks it lazily anyway
+        bias = jnp.broadcast_to(base + mb, (n_head, s, s))
     if attention_impl == "evo_pallas":
         from repro.kernels.flash_attention import evo_supported
         if not evo_supported(s):
@@ -130,20 +161,30 @@ def global_attention_init(key, c_in: int, c_hidden: int, n_head: int) -> Params:
 
 
 def global_attention(p: Params, x: jnp.ndarray, *, n_head: int,
-                     c_hidden: int) -> jnp.ndarray:
+                     c_hidden: int,
+                     key_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Global (mean-query) attention along S: x (..., L, S, c) -> same.
 
     Extra-MSA column attention (AF2 Algorithm 19): one averaged query per
-    column, shared K/V heads; O(L*S) not O(L*S^2).
+    column, shared K/V heads; O(L*S) not O(L*S^2).  ``key_mask`` (S,) drops
+    padded rows from BOTH the averaged query and the softmax (a padded row
+    would otherwise shift the mean query of every valid column).
     """
     h = nn.layernorm(p["ln"], x)
     *lead, s, _ = x.shape
-    q_avg = jnp.mean(h, axis=-2)                                    # (..., c)
+    if key_mask is not None:
+        km = key_mask.astype(h.dtype)
+        q_avg = (jnp.sum(h * km[:, None], axis=-2)
+                 / jnp.maximum(jnp.sum(km), 1.0).astype(h.dtype))
+    else:
+        q_avg = jnp.mean(h, axis=-2)                                # (..., c)
     q = nn.dense(p["q"], q_avg).reshape(*lead, n_head, c_hidden)
     q = q * (c_hidden ** -0.5)
     k = nn.dense(p["k"], h)                                         # (..., S, c_h)
     v = nn.dense(p["v"], h)
     logits = jnp.einsum("...hc,...sc->...hs", q, k).astype(jnp.float32)
+    if key_mask is not None:
+        logits = logits + mask_bias(key_mask)
     w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     o = jnp.einsum("...hs,...sc->...hc", w, v)                      # (..., h, c_h)
     g = jax.nn.sigmoid(nn.dense(p["gate"], h))                      # (..., S, h*c)
@@ -183,13 +224,25 @@ def opm_init(key, c_m: int, c_hidden: int, c_z: int) -> Params:
     }
 
 
-def outer_product_mean(p: Params, msa: jnp.ndarray) -> jnp.ndarray:
+def _mask_opm_operands(a, b, row_mask, n_rows: int):
+    """Zero padded MSA rows of the OPM operands and return the matching mean
+    denominator (the number of VALID rows, not the padded row count)."""
+    if row_mask is None:
+        return a, b, float(n_rows)
+    rm = row_mask.astype(a.dtype)[:, None, None]
+    denom = jnp.maximum(jnp.sum(row_mask.astype(jnp.float32)), 1.0)
+    return a * rm, b * rm, denom
+
+
+def outer_product_mean(p: Params, msa: jnp.ndarray,
+                       row_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """msa (s, r, c_m) -> pair update (r, r, c_z).  Naive oracle: materializes
     the full (r, r, c_hidden^2) outer-product tensor before projecting."""
     h = nn.layernorm(p["ln"], msa)
     a = nn.dense(p["a"], h)                                   # (s, r, c)
     b = nn.dense(p["b"], h)
-    outer = jnp.einsum("sic,sjd->ijcd", a, b) / msa.shape[0]
+    a, b, denom = _mask_opm_operands(a, b, row_mask, msa.shape[0])
+    outer = jnp.einsum("sic,sjd->ijcd", a, b) / denom
     outer = outer.reshape(*outer.shape[:2], -1)
     return nn.dense(p["out"], outer.astype(msa.dtype))
 
@@ -223,22 +276,27 @@ def opm_contract(a: jnp.ndarray, b: jnp.ndarray, w: jnp.ndarray,
 
 
 def outer_product_mean_fused(p: Params, msa: jnp.ndarray, *,
-                             row_chunk: int = 32) -> jnp.ndarray:
+                             row_chunk: int = 32,
+                             row_mask: Optional[jnp.ndarray] = None
+                             ) -> jnp.ndarray:
     """Fused OPM: numerically matches :func:`outer_product_mean` but the
     (r, r, c_hidden^2) intermediate never exists (see :func:`opm_contract`)."""
     h = nn.layernorm(p["ln"], msa)
     a = nn.dense(p["a"], h)                                   # (s, r, c)
     b = nn.dense(p["b"], h)
+    a, b, denom = _mask_opm_operands(a, b, row_mask, msa.shape[0])
     return opm_contract(a, b, p["out"]["w"], p["out"]["b"],
-                        float(msa.shape[0]), msa.dtype, row_chunk=row_chunk)
+                        denom, msa.dtype, row_chunk=row_chunk)
 
 
-def opm_apply(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray) -> jnp.ndarray:
+def opm_apply(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray,
+              row_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """OPM dispatch on ``cfg.opm_impl`` ('fused' | 'naive')."""
     if cfg.opm_impl == "fused":
-        return outer_product_mean_fused(p, msa, row_chunk=cfg.opm_chunk)
+        return outer_product_mean_fused(p, msa, row_chunk=cfg.opm_chunk,
+                                        row_mask=row_mask)
     if cfg.opm_impl == "naive":
-        return outer_product_mean(p, msa)
+        return outer_product_mean(p, msa, row_mask=row_mask)
     raise ValueError(f"unknown opm impl {cfg.opm_impl!r}")
 
 
@@ -263,17 +321,26 @@ def triangle_mult_init(key, c_z: int, c_hidden: int) -> Params:
     return p
 
 
-def triangle_mult(p: Params, z: jnp.ndarray, *, outgoing: bool) -> jnp.ndarray:
+def triangle_mult(p: Params, z: jnp.ndarray, *, outgoing: bool,
+                  k_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Reference (oracle) triangle-multiplicative update.
 
     The k-contraction accumulates in fp32 (``preferred_element_type``): under
     the AMP policy a/b are bf16 and a bf16 accumulation over r >= 128 terms
     loses ~half the mantissa — the reference must stay a valid numerical
     oracle for the chunked/Pallas impls (pinned by tests/test_triangle.py).
+
+    ``k_mask`` (r,) zeroes padded residues' contributions to the
+    k-contraction (the gated projection of a padded-but-nonzero pair entry
+    is NOT zero — sigmoid(gate_bias)·proj_bias survives any input).
     """
     x = nn.layernorm(p["ln_in"], z)
     a = jax.nn.sigmoid(nn.dense(p["a_gate"], x)) * nn.dense(p["a"], x)
     b = jax.nn.sigmoid(nn.dense(p["b_gate"], x)) * nn.dense(p["b"], x)
+    if k_mask is not None:
+        km = k_mask.astype(a.dtype)
+        # the contracted axis is k: axis 1 for outgoing (ik), 0 for incoming
+        a = a * (km[None, :, None] if outgoing else km[:, None, None])
     if outgoing:
         o = jnp.einsum("ikc,jkc->ijc", a, b,   # 'outgoing' edges
                        preferred_element_type=jnp.float32)
@@ -296,7 +363,8 @@ def _tri_mult_packed_weights(p: Params):
 
 def triangle_mult_fused(p: Params, xa: jnp.ndarray, xb: jnp.ndarray,
                         xg: jnp.ndarray, *, impl: str, chunk: int = 64,
-                        out_dtype=None) -> jnp.ndarray:
+                        out_dtype=None,
+                        k_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Fused triangle-mult core shared by the serial and DAP paths.
 
     Operands are already LN'd and oriented so that
@@ -311,15 +379,23 @@ def triangle_mult_fused(p: Params, xa: jnp.ndarray, xb: jnp.ndarray,
     immediately by its out-LN/out-proj/gate epilogue — neither the
     (r, r, 2·c_hidden) gated-projection pair nor any full-size pre-gate
     tensor is ever materialized (jaxpr-pinned by tests/test_triangle.py).
+
+    ``k_mask`` (r_k,) additionally drops padded-bucket residues from the
+    k-contraction (inference; both impls honor it — the Pallas kernel takes
+    it as a streamed operand via the forward-only masked entry point).
     """
     out_dtype = out_dtype or xg.dtype
     if impl == "pallas":
         from repro.kernels import ops as kops
         w_a, b_a, w_b, b_b = _tri_mult_packed_weights(p)
-        y = kops.triangle_mult(xa, xb, xg, w_a, b_a, w_b, b_b,
-                               p["ln_out"]["scale"], p["ln_out"]["bias"],
-                               p["out"]["w"], p["out"]["b"],
-                               p["gate"]["w"], p["gate"]["b"])
+        packed = (w_a, b_a, w_b, b_b,
+                  p["ln_out"]["scale"], p["ln_out"]["bias"],
+                  p["out"]["w"], p["out"]["b"],
+                  p["gate"]["w"], p["gate"]["b"])
+        if k_mask is None:
+            y = kops.triangle_mult(xa, xb, xg, *packed)
+        else:
+            y = kops.triangle_mult_masked(xa, xb, xg, k_mask, *packed)
         return y.astype(out_dtype)
     if impl != "chunked":
         raise ValueError(f"unknown tri_mult impl {impl!r}")
@@ -332,7 +408,14 @@ def triangle_mult_fused(p: Params, xa: jnp.ndarray, xb: jnp.ndarray,
     pad_k = lambda t: (jnp.pad(t, ((0, 0), (0, kpad), (0, 0)))
                        if kpad else t)
     # padded k columns project to sigmoid(b_gate)*b_val != 0: mask them out
-    k_valid = (jnp.arange(n_k * kc).reshape(n_k, kc) < r_k)[..., None]
+    # (chunk padding always; bucket padding when a k_mask is given)
+    k_valid = jnp.arange(n_k * kc).reshape(n_k, kc) < r_k
+    if k_mask is not None:
+        km = k_mask.astype(bool)
+        if kpad:
+            km = jnp.pad(km, (0, kpad), constant_values=False)
+        k_valid = k_valid & km.reshape(n_k, kc)
+    k_valid = k_valid[..., None]
 
     def gated(pa, pg, t):
         return jax.nn.sigmoid(nn.dense(pg, t)) * nn.dense(pa, t)
@@ -379,20 +462,24 @@ def tri_mult_supported(r_i: int, r_j: int, r_k: int) -> bool:
 
 
 def tri_mult_apply(p: Params, cfg: EvoformerConfig, z: jnp.ndarray, *,
-                   outgoing: bool) -> jnp.ndarray:
+                   outgoing: bool,
+                   k_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Triangle-mult dispatch on ``cfg.tri_mult_impl``
-    ('reference' | 'chunked' | 'pallas')."""
+    ('reference' | 'chunked' | 'pallas').  ``k_mask`` (r,) marks valid
+    residues on the contracted axis (padded-bucket inference)."""
     impl = cfg.tri_mult_impl
     if impl == "pallas" and not tri_mult_supported(*z.shape[:2], z.shape[0]):
         impl = "chunked"  # poorly factorable r: near-rowwise tiles — fall back
     if impl == "reference":
-        return triangle_mult(p, z, outgoing=outgoing)
+        return triangle_mult(p, z, outgoing=outgoing, k_mask=k_mask)
     if impl not in ("chunked", "pallas"):
         raise ValueError(f"unknown tri_mult impl {impl!r}")
     x = nn.layernorm(p["ln_in"], z)
     xab = x if outgoing else x.swapaxes(0, 1)
+    # both orientations keep k on axis 1 of xa/xb, so the same (r,) mask works
     return triangle_mult_fused(p, xab, xab, x, impl=impl,
-                               chunk=cfg.tri_mult_chunk, out_dtype=z.dtype)
+                               chunk=cfg.tri_mult_chunk, out_dtype=z.dtype,
+                               k_mask=k_mask)
 
 
 # ---------------------------------------------------------------------------
@@ -422,12 +509,21 @@ def evoformer_block_init(key, cfg: EvoformerConfig) -> Params:
 
 def msa_branch(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray,
                z_bias_src: jnp.ndarray, *, rng=None,
-               deterministic: bool = True) -> jnp.ndarray:
-    """Row attention (pair-biased) -> column attention -> transition."""
+               deterministic: bool = True,
+               masks: Optional[EvoMasks] = None) -> jnp.ndarray:
+    """Row attention (pair-biased) -> column attention -> transition.
+
+    ``masks`` (padded-bucket inference): row attention masks padded residue
+    KEYS (along r); column attention masks padded MSA-row keys (along s).
+    """
     kw = dict(attention_impl=cfg_attention_impl(cfg),
               attention_chunk=cfg_attention_chunk(cfg))
+    res_mask = rows_mask = None
+    if masks is not None:
+        rows_mask, res_mask = masks.rows, masks.res
     upd = gated_attention(p["row_attn"], msa, n_head=cfg.n_head_msa,
-                          c_hidden=cfg.c_hidden_att, bias_input=z_bias_src, **kw)
+                          c_hidden=cfg.c_hidden_att, bias_input=z_bias_src,
+                          key_mask=res_mask, **kw)
     if rng is not None:
         rng, k = jax.random.split(rng)
         upd = shared_dropout(k, upd, cfg.dropout_msa, shared_axis=0,
@@ -435,20 +531,28 @@ def msa_branch(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray,
     msa = msa + upd
     if cfg.global_column_attn:
         col = global_attention(p["col_attn"], msa.swapaxes(0, 1),
-                               n_head=cfg.n_head_msa, c_hidden=cfg.c_hidden_att)
+                               n_head=cfg.n_head_msa, c_hidden=cfg.c_hidden_att,
+                               key_mask=rows_mask)
     else:
         col = gated_attention(p["col_attn"], msa.swapaxes(0, 1),
-                              n_head=cfg.n_head_msa, c_hidden=cfg.c_hidden_att, **kw)
+                              n_head=cfg.n_head_msa, c_hidden=cfg.c_hidden_att,
+                              key_mask=rows_mask, **kw)
     msa = msa + col.swapaxes(0, 1)
     msa = msa + transition(p["msa_trans"], msa)
     return msa
 
 
 def pair_branch(p: Params, cfg: EvoformerConfig, z: jnp.ndarray, *, rng=None,
-                deterministic: bool = True) -> jnp.ndarray:
-    """Triangle updates + triangle attention + transition."""
+                deterministic: bool = True,
+                masks: Optional[EvoMasks] = None) -> jnp.ndarray:
+    """Triangle updates + triangle attention + transition.
+
+    ``masks.res`` masks the triangle-mult k-contractions and the triangle
+    attention keys (both directions) against padded-bucket residues.
+    """
     kw = dict(attention_impl=cfg_attention_impl(cfg),
               attention_chunk=cfg_attention_chunk(cfg))
+    res_mask = masks.res if masks is not None else None
 
     def drop(key_idx, x, shared_axis):
         if rng is None:
@@ -457,42 +561,55 @@ def pair_branch(p: Params, cfg: EvoformerConfig, z: jnp.ndarray, *, rng=None,
         return shared_dropout(k, x, cfg.dropout_pair, shared_axis=shared_axis,
                               deterministic=deterministic)
 
-    z = z + drop(0, tri_mult_apply(p["tri_mul_out"], cfg, z, outgoing=True), 0)
-    z = z + drop(1, tri_mult_apply(p["tri_mul_in"], cfg, z, outgoing=False), 0)
+    z = z + drop(0, tri_mult_apply(p["tri_mul_out"], cfg, z, outgoing=True,
+                                   k_mask=res_mask), 0)
+    z = z + drop(1, tri_mult_apply(p["tri_mul_in"], cfg, z, outgoing=False,
+                                   k_mask=res_mask), 0)
     z = z + drop(2, gated_attention(p["tri_att_start"], z, n_head=cfg.n_head_pair,
                                     c_hidden=cfg.c_hidden_pair_att,
-                                    bias_input=z, **kw), 0)
+                                    bias_input=z, key_mask=res_mask, **kw), 0)
     zt = z.swapaxes(0, 1)
     att_end = gated_attention(p["tri_att_end"], zt, n_head=cfg.n_head_pair,
-                              c_hidden=cfg.c_hidden_pair_att, bias_input=zt, **kw)
+                              c_hidden=cfg.c_hidden_pair_att, bias_input=zt,
+                              key_mask=res_mask, **kw)
     z = z + drop(3, att_end.swapaxes(0, 1), 1)
     z = z + transition(p["pair_trans"], z)
     return z
 
 
 def evoformer_block(p: Params, cfg: EvoformerConfig, msa: jnp.ndarray,
-                    z: jnp.ndarray, *, rng=None, deterministic: bool = True):
-    """Dispatch on cfg.variant (paper Fig 1a/1b/1c)."""
+                    z: jnp.ndarray, *, rng=None, deterministic: bool = True,
+                    masks: Optional[EvoMasks] = None):
+    """Dispatch on cfg.variant (paper Fig 1a/1b/1c).
+
+    ``masks`` (padded-bucket inference, DESIGN.md §10): residue/row validity
+    threaded into every op that mixes across positions — attention keys,
+    OPM row sum, triangle k-contraction.  ``None`` = training fast path.
+    """
     rngs = (None, None) if rng is None else tuple(jax.random.split(rng))
+    row_mask = masks.rows if masks is not None else None
     if cfg.variant == "af2":
         msa_out = msa_branch(p, cfg, msa, z, rng=rngs[0],
-                             deterministic=deterministic)
-        z = z + opm_apply(p["opm"], cfg, msa_out)
-        z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic)
+                             deterministic=deterministic, masks=masks)
+        z = z + opm_apply(p["opm"], cfg, msa_out, row_mask=row_mask)
+        z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic,
+                            masks=masks)
         return msa_out, z_out
     if cfg.variant == "multimer":
-        z = z + opm_apply(p["opm"], cfg, msa)
+        z = z + opm_apply(p["opm"], cfg, msa, row_mask=row_mask)
         msa_out = msa_branch(p, cfg, msa, z, rng=rngs[0],
-                             deterministic=deterministic)
-        z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic)
+                             deterministic=deterministic, masks=masks)
+        z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic,
+                            masks=masks)
         return msa_out, z_out
     if cfg.variant == "parallel":
         # Paper Fig 1c / Fig 4: both branches read only block inputs; the OPM
         # (computed from the MSA branch output) lands at the end of the block.
         msa_out = msa_branch(p, cfg, msa, z, rng=rngs[0],
-                             deterministic=deterministic)
-        z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic)
-        z_out = z_out + opm_apply(p["opm"], cfg, msa_out)
+                             deterministic=deterministic, masks=masks)
+        z_out = pair_branch(p, cfg, z, rng=rngs[1], deterministic=deterministic,
+                            masks=masks)
+        z_out = z_out + opm_apply(p["opm"], cfg, msa_out, row_mask=row_mask)
         return msa_out, z_out
     raise ValueError(f"unknown Evoformer variant {cfg.variant!r}")
 

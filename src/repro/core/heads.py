@@ -43,6 +43,43 @@ def plddt_logits(p: Params, s: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# Confidence utilities (inference; consumed by core.model.predict / FoldEngine)
+# ---------------------------------------------------------------------------
+
+def plddt_from_logits(logits: jnp.ndarray) -> jnp.ndarray:
+    """Binned-confidence logits (..., n_bins) -> per-residue pLDDT in [0, 100].
+
+    Expected value over equal-width bins.  This repo's confidence head is
+    trained on binned CA error ORDERED BY INCREASING ERROR (``plddt_loss``),
+    so bin centers descend linearly from 100 (bin 0: smallest predicted
+    error = most confident) to 0 — moving probability mass to a higher-error
+    bin strictly lowers the score (pinned by tests/test_fold_engine.py).
+    """
+    nb = logits.shape[-1]
+    centers = 100.0 * (1.0 - (jnp.arange(nb, dtype=jnp.float32) + 0.5) / nb)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("...b,b->...", probs, centers)
+
+
+def contact_probs_from_distogram(logits: jnp.ndarray, *, cutoff: float = 8.0,
+                                 min_dist: float = 2.3125,
+                                 max_dist: float = 21.6875) -> jnp.ndarray:
+    """Distogram logits (..., r, r, n_bins) -> P(d_ij <= cutoff) in [0, 1].
+
+    Bin b covers (edges[b-1], edges[b]] with ``edges = linspace(min_dist,
+    max_dist, n_bins - 1)`` — the exact discretization of
+    :func:`distogram_loss`; a bin counts toward contact iff its UPPER edge
+    is <= cutoff, so the trailing open bin never counts and the result is a
+    conservative <=8Å mass.
+    """
+    nb = logits.shape[-1]
+    edges = jnp.linspace(min_dist, max_dist, nb - 1)
+    upper = jnp.concatenate([edges, jnp.array([jnp.inf])])
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.sum(probs * (upper <= cutoff), axis=-1)
+
+
+# ---------------------------------------------------------------------------
 # Losses
 # ---------------------------------------------------------------------------
 

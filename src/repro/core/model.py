@@ -61,14 +61,24 @@ def embed_inputs(p: Params, cfg: AlphaFold2Config, batch: dict, dtype=jnp.bfloat
     return msa, z, extra
 
 
+def recycle_distance_bins(x: jnp.ndarray) -> jnp.ndarray:
+    """CA coords (r, 3) -> binned distance map (r, r) int32.
+
+    THE recycling discretization (15 bins, edges 3.375..21.375): consumed by
+    the recycling embedder AND by ``predict``'s early-exit convergence test —
+    one definition so they can never drift apart.
+    """
+    d = jnp.sqrt(jnp.sum(jnp.square(x[:, None] - x[None, :]), -1) + 1e-8)
+    edges = jnp.linspace(3.375, 21.375, 14)
+    return jnp.sum(d[..., None] > edges, -1).astype(jnp.int32)
+
+
 def embed_recycle(p: Params, cfg: AlphaFold2Config, msa, z, prev):
     """Add recycled first-row MSA, pair rep, and binned CA-distance embedding."""
     prev_msa0, prev_z, prev_x = prev
     msa = msa.at[0].add(nn.layernorm(p["rec_msa_ln"], prev_msa0).astype(msa.dtype))
     z = z + nn.layernorm(p["rec_z_ln"], prev_z).astype(z.dtype)
-    d = jnp.sqrt(jnp.sum(jnp.square(prev_x[:, None] - prev_x[None, :]), -1) + 1e-8)
-    edges = jnp.linspace(3.375, 21.375, 14)
-    bins = jax.nn.one_hot(jnp.sum(d[..., None] > edges, -1), 15, dtype=z.dtype)
+    bins = jax.nn.one_hot(recycle_distance_bins(prev_x), 15, dtype=z.dtype)
     z = z + nn.dense(p["rec_dist"], bins)
     return msa, z
 
@@ -89,15 +99,20 @@ BlockFn = Callable[..., tuple]
 
 def evoformer_stack(params, cfg_block, n_blocks: int, msa, z, *, scan: bool,
                     remat: bool, block_fn: Optional[BlockFn] = None,
-                    rng=None, deterministic: bool = True):
+                    rng=None, deterministic: bool = True,
+                    masks: Optional[evo.EvoMasks] = None):
     """Apply n_blocks Evoformer blocks (scan over stacked params)."""
     fn = block_fn or evo.evoformer_block
+
+    # masks only reach the block when present (inference) — training-path
+    # block_fns predating the masks kwarg keep working unchanged
+    mask_kw = {} if masks is None else {"masks": masks}
 
     def one_block(carry, xs):
         msa, z = carry
         block_params, key = xs
         m, zz = fn(block_params, cfg_block, msa, z, rng=key,
-                   deterministic=deterministic)
+                   deterministic=deterministic, **mask_kw)
         return (m.astype(msa.dtype), zz.astype(z.dtype)), None
 
     if remat == "dots":
@@ -142,16 +157,50 @@ def init_params(key, cfg: AlphaFold2Config) -> Params:
     }
 
 
+def trunk_masks(batch) -> Optional[dict]:
+    """Extract padded-bucket validity masks from an inference batch.
+
+    Returns ``{"res", "msa_rows", "extra_rows"}`` (each possibly None) or
+    None when the batch carries no row mask at all — the training fast path.
+    ``res_mask`` alone does NOT trigger masking (training batches carry it
+    for the losses); inference batches opt in by carrying the row masks
+    (``serve.fold_steps.pad_to_bucket`` always adds all three).
+    """
+    if not any(k in batch for k in ("msa_row_mask", "extra_row_mask")):
+        return None
+    return {"res": batch.get("res_mask"),
+            "msa_rows": batch.get("msa_row_mask"),
+            "extra_rows": batch.get("extra_row_mask")}
+
+
 def run_trunk(params, cfg: AlphaFold2Config, batch, prev, *, block_fn=None,
-              stack_io=None, rng=None, deterministic=True, dtype=jnp.bfloat16):
+              stack_io=None, rng=None, deterministic=True, dtype=jnp.bfloat16,
+              masks: Optional[dict] = None):
     """One recycling iteration of the trunk: returns (msa, z, single).
 
     ``stack_io`` = (pre, post): applied around each Evoformer stack — DAP
     uses it to shard (msa, z) at stack entry and all_gather at exit.
+
+    ``masks`` = {"res": (r,), "msa_rows": (s,), "extra_rows": (se,)} validity
+    masks for padded-bucket inference (see :func:`trunk_masks`); each stack
+    receives its own row mask.  Masked axes are consumed at FULL extent in
+    every layout (DAP shards queries, never keys), so the same masks work
+    for serial and dap block_fns.
     """
     msa, z, extra = embed_inputs(params["embedder"], cfg, batch, dtype)
     msa, z = embed_recycle(params["embedder"], cfg, msa, z, prev)
     pre, post = stack_io or ((lambda m, zz: (m, zz)),) * 2
+    extra_masks = main_masks = None
+    if masks is not None:
+        ones = lambda n: jnp.ones((n,), jnp.float32)
+        res = masks.get("res")
+        res = ones(z.shape[0]) if res is None else res
+        rows = masks.get("extra_rows")
+        extra_masks = evo.EvoMasks(
+            ones(extra.shape[0]) if rows is None else rows, res)
+        rows = masks.get("msa_rows")
+        main_masks = evo.EvoMasks(
+            ones(msa.shape[0]) if rows is None else rows, res)
     k1 = k2 = None
     if rng is not None:
         rng, k1, k2 = jax.random.split(rng, 3)
@@ -161,14 +210,15 @@ def run_trunk(params, cfg: AlphaFold2Config, batch, prev, *, block_fn=None,
                              scan=cfg.scan_blocks,
                              remat=False if cfg.remat == "none" else cfg.remat,
                              block_fn=block_fn, rng=k1,
-                             deterministic=deterministic)
+                             deterministic=deterministic, masks=extra_masks)
     msa_l = pre(msa, z)[0]        # z stays sharded between the two stacks
     msa_l, z_l = evoformer_stack(params["evoformer"], cfg.evoformer,
                                  cfg.n_evoformer, msa_l, z_l,
                                  scan=cfg.scan_blocks,
                                  remat=(False if cfg.remat == "none"
                                         else cfg.remat), block_fn=block_fn,
-                                 rng=k2, deterministic=deterministic)
+                                 rng=k2, deterministic=deterministic,
+                                 masks=main_masks)
     msa, z = post(msa_l, z_l)
     single = nn.dense(params["embedder"]["single_proj"], msa[0])
     return msa, z, single
@@ -206,6 +256,101 @@ def forward(params, cfg: AlphaFold2Config, batch, *, n_recycle: int = 1,
             jax.lax.fori_loop(0, n_recycle - 1, body, prev))
     out, _ = cycle(prev, False)
     return out
+
+
+def predict(params, cfg: AlphaFold2Config, batch, *, max_recycle: int,
+            tol: float = 0.0, block_fn=None, stack_io=None,
+            dtype=jnp.bfloat16) -> dict:
+    """Batched inference with adaptive early-exit recycling (DESIGN.md §10).
+
+    ``batch``: per-sample features with a leading batch axis (B, ...) —
+    msa_feat, extra_msa_feat, target_feat, residue_index, plus (padded
+    buckets) res_mask / msa_row_mask / extra_row_mask validity masks.
+
+    Runs trunk + structure cycles inside one ``lax.while_loop``.  After each
+    cycle the recycled CA-distance maps are re-binned with the SAME 15-bin
+    discretization the recycling embedder consumes; a sample converges when
+    fewer than ``tol`` of its valid residue pairs changed bin — recycling
+    past that point feeds the trunk a (near-)identical recycling embedding,
+    so further cycles are wasted FLOPs (ParaFold's observation: serving is
+    scheduling-bound, not model-bound).  Converged samples FREEZE in place —
+    their carried state stops updating while unconverged batchmates keep
+    recycling — and the loop exits early once every sample froze.
+
+    ``tol=0.0`` can never converge (strict ``<``): exactly ``max_recycle``
+    cycles run, reproducing ``forward(n_recycle=max_recycle)``.
+
+    Returns: coords (B, r, 3) fp32; plddt (B, r) in [0, 100]; contact_probs
+    (B, r, r); the raw plddt/distogram logits; n_recycles (B,) cycles each
+    sample actually consumed; converged (B,) bool.
+    """
+    if max_recycle < 1:
+        raise ValueError(f"max_recycle must be >= 1, got {max_recycle}")
+    params = nn.Policy(compute_dtype=dtype).cast(params)
+    bsz, r = batch["target_feat"].shape[:2]
+    c_m, c_z, c_s = cfg.c_m, cfg.c_z, cfg.structure.c_s
+    res_mask = batch.get("res_mask")
+
+    def one_cycle(sample, prev):
+        msa, z, single = run_trunk(params, cfg, sample, prev,
+                                   block_fn=block_fn, stack_io=stack_io,
+                                   rng=None, deterministic=True, dtype=dtype,
+                                   masks=trunk_masks(sample))
+        (_, trans), _, s_final = struct.structure_module(
+            params["structure"], cfg.structure, single, z,
+            sample.get("res_mask"))
+        return (msa[0], z, trans), s_final
+
+    prev0 = (jnp.zeros((bsz, r, c_m), dtype),
+             jnp.zeros((bsz, r, r, c_z), dtype),
+             jnp.zeros((bsz, r, 3), jnp.float32))
+    sf0 = jnp.zeros((bsz, r, c_s), dtype)
+    if res_mask is not None:
+        pair_mask = (res_mask[:, :, None] * res_mask[:, None, :]
+                     ).astype(jnp.float32)
+    else:
+        pair_mask = jnp.ones((bsz, r, r), jnp.float32)
+    pair_count = jnp.maximum(jnp.sum(pair_mask, (1, 2)), 1.0)
+
+    def cond(state):
+        i, _, _, conv, _ = state
+        return (i < max_recycle) & ~jnp.all(conv)
+
+    def body(state):
+        i, prev, sf, conv, n_rec = state
+        new_prev, new_sf = jax.vmap(one_cycle)(batch, prev)
+        old_bins = jax.vmap(recycle_distance_bins)(prev[2])
+        new_bins = jax.vmap(recycle_distance_bins)(new_prev[2])
+        frac = jnp.sum((old_bins != new_bins) * pair_mask, (1, 2)) / pair_count
+        keep = conv  # frozen samples discard the cycle they just (re)ran
+
+        def sel(old, new):
+            return jnp.where(keep.reshape(-1, *([1] * (new.ndim - 1))),
+                             old, new)
+        prev = jax.tree_util.tree_map(sel, prev, new_prev)
+        sf = sel(sf, new_sf)
+        n_rec = n_rec + jnp.where(keep, 0, 1)
+        conv = conv | ((frac < tol) & ~keep)
+        return i + 1, prev, sf, conv, n_rec
+
+    state0 = (jnp.zeros((), jnp.int32), prev0, sf0,
+              jnp.zeros((bsz,), bool), jnp.zeros((bsz,), jnp.int32))
+    _, prev, s_final, conv, n_rec = jax.lax.while_loop(cond, body, state0)
+    msa0, z, coords = prev
+
+    plddt_logits = jax.vmap(
+        lambda s: heads_lib.plddt_logits(params["heads"], s))(s_final)
+    disto_logits = jax.vmap(
+        lambda zz: heads_lib.distogram_logits(params["heads"], zz))(z)
+    return {
+        "coords": coords,
+        "plddt": heads_lib.plddt_from_logits(plddt_logits),
+        "contact_probs": heads_lib.contact_probs_from_distogram(disto_logits),
+        "plddt_logits": plddt_logits,
+        "distogram_logits": disto_logits,
+        "n_recycles": n_rec,
+        "converged": conv,
+    }
 
 
 def loss_fn(params, cfg: AlphaFold2Config, batch, *, n_recycle: int = 1,

@@ -73,7 +73,8 @@ def ipa_init(key, cfg: StructureConfig) -> Params:
     }
 
 
-def invariant_point_attention(p: Params, cfg: StructureConfig, s, z, rots, trans):
+def invariant_point_attention(p: Params, cfg: StructureConfig, s, z, rots,
+                              trans, res_mask=None):
     r = s.shape[0]
     h, c, n_qp, n_vp = cfg.n_head, cfg.c_hidden, cfg.n_qk_points, cfg.n_v_points
 
@@ -100,6 +101,12 @@ def invariant_point_attention(p: Params, cfg: StructureConfig, s, z, rots, trans
     point = jnp.moveaxis(point, -1, 0)
     w_l = (1.0 / 3.0) ** 0.5
     logits = w_l * (scalar + pair + point)
+    if res_mask is not None:
+        # padded-bucket residues must not be attended to (their frames and
+        # point clouds are garbage); queries at padded i stay garbage but
+        # never feed back into valid rows
+        from repro.core.evoformer import mask_bias
+        logits = logits + mask_bias(res_mask)[None, None]
     att = jax.nn.softmax(logits, axis=-1)                            # (h, i, j)
 
     o_scalar = jnp.einsum("hij,jhc->ihc", att.astype(v.dtype), v).reshape(r, -1)
@@ -137,8 +144,13 @@ def structure_module_init(key, cfg: StructureConfig) -> Params:
     }
 
 
-def structure_module(p: Params, cfg: StructureConfig, s_init, z):
-    """Returns final (rots, trans), per-iteration trans trajectory, final s."""
+def structure_module(p: Params, cfg: StructureConfig, s_init, z,
+                     res_mask=None):
+    """Returns final (rots, trans), per-iteration trans trajectory, final s.
+
+    ``res_mask`` (r,) masks IPA keys against padded-bucket residues
+    (inference); ``None`` = training fast path (loss already masks).
+    """
     r = s_init.shape[0]
     s = nn.dense(p["proj_s"], nn.layernorm(p["ln_s"], s_init))
     z = nn.layernorm(p["ln_z"], z)
@@ -146,7 +158,8 @@ def structure_module(p: Params, cfg: StructureConfig, s_init, z):
 
     def iteration(carry, _):
         s, rots, trans = carry
-        s = s + invariant_point_attention(p["ipa"], cfg, s, z, rots, trans)
+        s = s + invariant_point_attention(p["ipa"], cfg, s, z, rots, trans,
+                                          res_mask)
         s = nn.layernorm(p["ln_ipa"], s)
         mlp = p["trans_mlp"]
         h = jax.nn.relu(nn.dense(mlp["w1"], s))

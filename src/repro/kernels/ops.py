@@ -184,3 +184,18 @@ def _tm_bwd(res, dy):
 
 
 triangle_mult.defvjp(_tm_fwd, _tm_bwd)
+
+
+def triangle_mult_masked(xa, xb, xg, k_mask, w_a, b_a, w_b, b_b, ln_s, ln_b,
+                         w_o, b_o, w_g, b_g):
+    """Forward-only masked triangle mult (padded-bucket inference).
+
+    Same fused kernel as :func:`triangle_mult` plus a streamed (r_k,)
+    k-validity operand that zeroes padded residues' contraction terms
+    in-kernel.  The fold serving path never differentiates, so no custom
+    VJP is wired — training always folds full buckets (``k_mask=None``)
+    and keeps the Pallas backward.
+    """
+    return tk.triangle_mult_fwd(xa, xb, xg, w_a, b_a, w_b, b_b, ln_s, ln_b,
+                                w_o, b_o, w_g, b_g, k_mask=k_mask,
+                                interpret=not _on_tpu())

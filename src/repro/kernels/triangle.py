@@ -66,7 +66,12 @@ def _proj_gated(xs, w_ref, b_ref, c: int):
 
 def _tri_fwd_kernel(xa_ref, xb_ref, xg_ref, wa_ref, ba_ref, wb_ref, bb_ref,
                     lns_ref, lnb_ref, wo_ref, bo_ref, wg_ref, bg_ref,
-                    o_ref, *rest, block_k: int, seq_k: int, c_hidden: int):
+                    *rest, block_k: int, seq_k: int, c_hidden: int,
+                    masked: bool):
+    if masked:
+        kmask_ref, o_ref, *rest = rest
+    else:
+        kmask_ref, (o_ref, *rest) = None, rest
     c = c_hidden
     bi, bj = xa_ref.shape[0], xb_ref.shape[0]
     acc = jnp.zeros((c, bi, bj), jnp.float32)
@@ -75,6 +80,12 @@ def _tri_fwd_kernel(xa_ref, xb_ref, xg_ref, wa_ref, ba_ref, wb_ref, bb_ref,
         ksl = (slice(None), pl.dslice(kb * block_k, block_k), slice(None))
         a = _proj_gated(pl.load(xa_ref, ksl), wa_ref, ba_ref, c)  # (bi,bk,c)
         b = _proj_gated(pl.load(xb_ref, ksl), wb_ref, bb_ref, c)  # (bj,bk,c)
+        if masked:
+            # padded-bucket residues: zero their k terms — the gated
+            # projection of a padded (nonzero) input row is not zero
+            km = pl.load(kmask_ref,
+                         (slice(None), pl.dslice(kb * block_k, block_k)))
+            a = a * km.astype(jnp.float32)[0][None, :, None]
         # s[c,i,j] += Σ_k a[i,k,c]·b[j,k,c]: c-batched MXU matmul
         return acc + jax.lax.dot_general(
             jnp.transpose(a, (2, 0, 1)), jnp.transpose(b, (2, 0, 1)),
@@ -115,8 +126,9 @@ def _weight_operands(w_a, b_a, w_b, b_b, ln_s, ln_b, w_o, b_o, w_g, b_g):
 
 
 def triangle_mult_fwd(xa, xb, xg, w_a, b_a, w_b, b_b, ln_s, ln_b, w_o, b_o,
-                      w_g, b_g, *, block_i: int = 128, block_j: int = 128,
-                      block_k: int = 128, interpret: bool = True,
+                      w_g, b_g, *, k_mask=None, block_i: int = 128,
+                      block_j: int = 128, block_k: int = 128,
+                      interpret: bool = True,
                       return_residuals: bool = False):
     """Fused triangle-mult forward.
 
@@ -125,6 +137,8 @@ def triangle_mult_fwd(xa, xb, xg, w_a, b_a, w_b, b_b, ln_s, ln_b, w_o, b_o,
     gate source in output orientation.  w_a/w_b are the packed
     [value | gate] (c_z, 2c) projections.  Returns (r_i, r_j, c_z); with
     ``return_residuals`` also the fp32 (r_i, r_j, c) pre-LN contraction.
+    ``k_mask`` (r_k,) zeroes masked residues' k-contraction terms in-kernel
+    (padded-bucket inference; see ``kernels.ops.triangle_mult_masked``).
     """
     r_i, r_k, _ = xa.shape
     r_j = xb.shape[0]
@@ -141,6 +155,11 @@ def triangle_mult_fwd(xa, xb, xg, w_a, b_a, w_b, b_b, ln_s, ln_b, w_o, b_o,
         pl.BlockSpec((bj, r_k, xb.shape[2]), lambda i, j: (j, 0, 0)),
         pl.BlockSpec((bi, bj, xg.shape[2]), lambda i, j: (i, j, 0)),
     ] + w_specs
+    mask_ops = []
+    if k_mask is not None:
+        mask2d = k_mask.astype(jnp.float32).reshape(1, r_k)
+        mask_ops = [mask2d]
+        in_specs.append(_const_spec(mask2d))
     out_shape = [jax.ShapeDtypeStruct((r_i, r_j, c_z), xg.dtype)]
     out_specs = [pl.BlockSpec((bi, bj, c_z), lambda i, j: (i, j, 0))]
     if return_residuals:
@@ -148,13 +167,14 @@ def triangle_mult_fwd(xa, xb, xg, w_a, b_a, w_b, b_b, ln_s, ln_b, w_o, b_o,
         out_specs.append(pl.BlockSpec((bi, bj, c), lambda i, j: (i, j, 0)))
 
     res = pl.pallas_call(
-        functools.partial(_tri_fwd_kernel, block_k=bk, seq_k=r_k, c_hidden=c),
+        functools.partial(_tri_fwd_kernel, block_k=bk, seq_k=r_k, c_hidden=c,
+                          masked=k_mask is not None),
         out_shape=out_shape,
         grid=(r_i // bi, r_j // bj),
         in_specs=in_specs,
         out_specs=out_specs,
         interpret=interpret,
-    )(xa, xb, xg, *w_ops)
+    )(xa, xb, xg, *w_ops, *mask_ops)
     return tuple(res) if return_residuals else res[0]
 
 

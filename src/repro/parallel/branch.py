@@ -47,8 +47,18 @@ def branch_parallel(branches: Sequence[Callable], *, axis: str = "branch"):
     return run
 
 
+def _reject_masks(masks):
+    if masks is not None:
+        raise ValueError(
+            "Branch Parallelism is a training layout; padded-bucket masks "
+            "are an inference feature — inference plans fold the branch "
+            "extent into data parallelism (ParallelPlan.for_inference), so "
+            "route masked folds through a serial or dap block_fn")
+
+
 def bp_evoformer_block(p, cfg: EvoformerConfig, msa, z, *, rng=None,
-                       deterministic: bool = True, axis: str = "branch"):
+                       deterministic: bool = True, axis: str = "branch",
+                       masks=None):
     """Branch-parallel Parallel-Evoformer block (Fig. 4).
 
     Device(branch=0): MSA stack + outer-product mean.
@@ -56,6 +66,7 @@ def bp_evoformer_block(p, cfg: EvoformerConfig, msa, z, *, rng=None,
     Exchange at block end; ``z_out = pair_branch(z) + OPM(msa_out)`` lands via
     the same psum (branch-0 contributes the OPM term, branch-1 the pair term).
     """
+    _reject_masks(masks)
     if cfg.variant != "parallel":
         raise ValueError(
             "Branch Parallelism requires the 'parallel' Evoformer variant "
@@ -80,7 +91,8 @@ def bp_evoformer_block(p, cfg: EvoformerConfig, msa, z, *, rng=None,
 
 def bp_dap_evoformer_block(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
                            deterministic: bool = True, n_seq_total: int = None,
-                           branch_axis: str = "branch", dap_axis: str = "dap"):
+                           branch_axis: str = "branch", dap_axis: str = "dap",
+                           masks=None):
     """Hybrid BP x DAP block (paper §4.3, Table 6).
 
     Inputs are DAP shards (replicated across ``branch``).  Branch 0 runs the
@@ -90,6 +102,7 @@ def bp_dap_evoformer_block(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
     replica groups only span devices that take that arm).
     """
     from repro.parallel import dap as dap_lib
+    _reject_masks(masks)
     if cfg.variant != "parallel":
         raise ValueError("hybrid BP x DAP requires the 'parallel' variant")
     rngs = (None, None) if rng is None else tuple(jax.random.split(rng))

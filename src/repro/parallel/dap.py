@@ -52,14 +52,22 @@ def _untranspose_shards(x, axis_name=AXIS):
 # ---------------------------------------------------------------------------
 
 def dap_msa_branch(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
-                   deterministic: bool = True, axis_name: str = AXIS):
+                   deterministic: bool = True, axis_name: str = AXIS,
+                   masks=None):
+    """``masks`` (``evo.EvoMasks``, padded-bucket inference): DAP shards the
+    QUERY axes only — every masked (key) axis is consumed at full extent, so
+    the full-length masks thread straight through (DESIGN.md §10)."""
     kw = dict(attention_impl=cfg.attention_impl,
               attention_chunk=cfg.attention_chunk)
+    res_mask = rows_mask = None
+    if masks is not None:
+        rows_mask, res_mask = masks.rows, masks.res
     # row attention: local over s-shard; bias gathered over the i-shard
     bias_l = evo.project_attention_bias(p["row_attn"], z_l)    # (h, r/d, r)
     bias = _all_gather(bias_l, axis_name, axis=1)              # (h, r, r)
     upd = evo.gated_attention(p["row_attn"], msa_l, n_head=cfg.n_head_msa,
-                              c_hidden=cfg.c_hidden_att, bias=bias, **kw)
+                              c_hidden=cfg.c_hidden_att, bias=bias,
+                              key_mask=res_mask, **kw)
     if rng is not None:
         rng, k = jax.random.split(rng)
         upd = evo.shared_dropout(k, upd, cfg.dropout_msa, shared_axis=0,
@@ -70,11 +78,13 @@ def dap_msa_branch(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
     if cfg.global_column_attn:
         col = evo.global_attention(p["col_attn"], msa_r.swapaxes(0, 1),
                                    n_head=cfg.n_head_msa,
-                                   c_hidden=cfg.c_hidden_att)
+                                   c_hidden=cfg.c_hidden_att,
+                                   key_mask=rows_mask)
     else:
         col = evo.gated_attention(p["col_attn"], msa_r.swapaxes(0, 1),
                                   n_head=cfg.n_head_msa,
-                                  c_hidden=cfg.c_hidden_att, **kw)
+                                  c_hidden=cfg.c_hidden_att,
+                                  key_mask=rows_mask, **kw)
     msa_r = msa_r + col.swapaxes(0, 1)
     msa_l = _untranspose_shards(msa_r, axis_name)              # (s/d, r, c)
     msa_l = msa_l + evo.transition(p["msa_trans"], msa_l)
@@ -83,7 +93,8 @@ def dap_msa_branch(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
 
 def dap_outer_product_mean(p, msa_l, n_seq_total: int = None,
                            axis_name: str = AXIS,
-                           row_chunk: int = 32, opm_impl: str = "fused"):
+                           row_chunk: int = 32, opm_impl: str = "fused",
+                           row_mask=None):
     """OPM with s-sharded MSA -> i-sharded pair update (r/d, r, c_z).
 
     ``n_seq_total`` is the OPM mean denominator — the stack's TOTAL row
@@ -91,6 +102,10 @@ def dap_outer_product_mean(p, msa_l, n_seq_total: int = None,
     dap extent, which is correct for every stack (the main Evoformer sees
     n_seq rows, the extra-MSA stack n_extra_seq; a fixed cfg.n_seq would be
     8x off on the extra stack at initial-training shapes).
+
+    ``row_mask`` (s, full extent) zeroes padded MSA rows after the shards
+    are re-gathered to full s, and replaces the denominator by the VALID
+    row count (padded-bucket inference).
 
     With ``opm_impl='fused'`` (the default) uses the fused row-chunked
     contraction (``evo.opm_contract``): even on the local i-shard the
@@ -105,15 +120,19 @@ def dap_outer_product_mean(p, msa_l, n_seq_total: int = None,
     a_i = _transpose_shards(a, axis_name)                      # (s, r/d, c)
     b_full = _all_gather(_transpose_shards(b, axis_name),      # (s, r, c)
                          axis_name, axis=1)
+    # same masking rule as the serial OPM — one definition, no drift
+    a_i, b_full, n_seq_total = evo._mask_opm_operands(
+        a_i, b_full, row_mask, n_seq_total)
     if opm_impl == "naive":
         outer = jnp.einsum("sic,sjd->ijcd", a_i, b_full) / n_seq_total
         outer = outer.reshape(*outer.shape[:2], -1)
         return nn.dense(p["out"], outer.astype(msa_l.dtype))
     if opm_impl != "fused":
         raise ValueError(f"unknown opm impl {opm_impl!r}")
+    # n_seq_total is already a denominator here: float, or the traced
+    # valid-row count when masked (see _mask_opm_operands)
     return evo.opm_contract(a_i, b_full, p["out"]["w"], p["out"]["b"],
-                            float(n_seq_total), msa_l.dtype,
-                            row_chunk=row_chunk)
+                            n_seq_total, msa_l.dtype, row_chunk=row_chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -121,8 +140,12 @@ def dap_outer_product_mean(p, msa_l, n_seq_total: int = None,
 # ---------------------------------------------------------------------------
 
 def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS,
-                      impl: str = "reference", chunk: int = 64):
+                      impl: str = "reference", chunk: int = 64, k_mask=None):
     """Triangle mult on an i-sharded pair rep (z_l (r/d, r, c_z)).
+
+    ``k_mask`` (r, full extent) drops padded residues from the
+    k-contraction; in every orientation below the contracted axis is full
+    length, so the same full mask applies everywhere.
 
     impl='reference' keeps the original schedule (project locally, gather /
     re-shard the PROJECTED operands).  The fused impls ('chunked'/'pallas')
@@ -152,13 +175,16 @@ def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS,
                 xa.shape[0], xb.shape[0], xa.shape[1]):
             impl = "chunked"
         return evo.triangle_mult_fused(p, xa, xb, x_l, impl=impl,
-                                       chunk=chunk, out_dtype=z_l.dtype)
+                                       chunk=chunk, out_dtype=z_l.dtype,
+                                       k_mask=k_mask)
     x = nn.layernorm(p["ln_in"], z_l)
     a = jax.nn.sigmoid(nn.dense(p["a_gate"], x)) * nn.dense(p["a"], x)
     b = jax.nn.sigmoid(nn.dense(p["b_gate"], x)) * nn.dense(p["b"], x)
     if outgoing:
         # out[i_l, j] = sum_k a[i_l, k] b[j, k]: gather b rows
         b_full = _all_gather(b, axis_name, axis=0)             # (r, r, c)
+        if k_mask is not None:
+            a = a * k_mask.astype(a.dtype)[None, :, None]
         o = jnp.einsum("ikc,jkc->ijc", a, b_full,
                        preferred_element_type=jnp.float32)
     else:
@@ -166,6 +192,8 @@ def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS,
         # re-shard a to (k, i_l), gather b to (k, r)
         a_col = _transpose_shards(a, axis_name)                # (r, r/d, c)
         b_full = _all_gather(b, axis_name, axis=0)             # (r, r, c)
+        if k_mask is not None:
+            a_col = a_col * k_mask.astype(a_col.dtype)[:, None, None]
         o = jnp.einsum("kic,kjc->ijc", a_col, b_full,
                        preferred_element_type=jnp.float32)
     o = nn.dense(p["out"], nn.layernorm(p["ln_out"], o.astype(z_l.dtype)))
@@ -174,9 +202,11 @@ def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS,
 
 
 def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
-                    deterministic: bool = True, axis_name: str = AXIS):
+                    deterministic: bool = True, axis_name: str = AXIS,
+                    masks=None):
     kw = dict(attention_impl=cfg.attention_impl,
               attention_chunk=cfg.attention_chunk)
+    res_mask = masks.res if masks is not None else None
 
     def drop(key_idx, x, shared_axis):
         if rng is None:
@@ -186,7 +216,7 @@ def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
                                   deterministic=deterministic)
 
     tri_kw = dict(axis_name=axis_name, impl=cfg.tri_mult_impl,
-                  chunk=cfg.tri_mult_chunk)
+                  chunk=cfg.tri_mult_chunk, k_mask=res_mask)
     z_l = z_l + drop(0, dap_triangle_mult(p["tri_mul_out"], z_l,
                                           outgoing=True, **tri_kw), 0)
     z_l = z_l + drop(1, dap_triangle_mult(p["tri_mul_in"], z_l,
@@ -195,14 +225,16 @@ def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
     bias = _all_gather(evo.project_attention_bias(p["tri_att_start"], z_l),
                        axis_name, axis=1)                      # (h, r, r)
     att = evo.gated_attention(p["tri_att_start"], z_l, n_head=cfg.n_head_pair,
-                              c_hidden=cfg.c_hidden_pair_att, bias=bias, **kw)
+                              c_hidden=cfg.c_hidden_pair_att, bias=bias,
+                              key_mask=res_mask, **kw)
     z_l = z_l + drop(2, att, 0)
     # ending-node attention: transpose shards, attend, transpose back
     zt_l = _transpose_shards(z_l, axis_name).swapaxes(0, 1)    # (r/d[j], r[i], c)
     bias_t = _all_gather(evo.project_attention_bias(p["tri_att_end"], zt_l),
                          axis_name, axis=1)
     att_t = evo.gated_attention(p["tri_att_end"], zt_l, n_head=cfg.n_head_pair,
-                                c_hidden=cfg.c_hidden_pair_att, bias=bias_t, **kw)
+                                c_hidden=cfg.c_hidden_pair_att, bias=bias_t,
+                                key_mask=res_mask, **kw)
     zt_l = zt_l + drop(3, att_t, 0)
     z_l = _untranspose_shards(zt_l.swapaxes(0, 1), axis_name)
     z_l = z_l + evo.transition(p["pair_trans"], z_l)
@@ -215,30 +247,38 @@ def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
 
 def dap_evoformer_block(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
                         deterministic: bool = True, n_seq_total: int = None,
-                        axis_name: str = AXIS):
+                        axis_name: str = AXIS, masks=None):
     rngs = (None, None) if rng is None else tuple(jax.random.split(rng))
+    row_mask = masks.rows if masks is not None else None
     opm = lambda m: dap_outer_product_mean(p["opm"], m, n_seq_total, axis_name,
                                            row_chunk=cfg.opm_chunk,
-                                           opm_impl=cfg.opm_impl)
+                                           opm_impl=cfg.opm_impl,
+                                           row_mask=row_mask)
     if cfg.variant == "af2":
         msa_l = dap_msa_branch(p, cfg, msa_l, z_l, rng=rngs[0],
-                               deterministic=deterministic, axis_name=axis_name)
+                               deterministic=deterministic, axis_name=axis_name,
+                               masks=masks)
         z_l = z_l + opm(msa_l)
         z_l = dap_pair_branch(p, cfg, z_l, rng=rngs[1],
-                              deterministic=deterministic, axis_name=axis_name)
+                              deterministic=deterministic, axis_name=axis_name,
+                              masks=masks)
         return msa_l, z_l
     if cfg.variant == "multimer":
         z_l = z_l + opm(msa_l)
         msa_l = dap_msa_branch(p, cfg, msa_l, z_l, rng=rngs[0],
-                               deterministic=deterministic, axis_name=axis_name)
+                               deterministic=deterministic, axis_name=axis_name,
+                               masks=masks)
         z_l = dap_pair_branch(p, cfg, z_l, rng=rngs[1],
-                              deterministic=deterministic, axis_name=axis_name)
+                              deterministic=deterministic, axis_name=axis_name,
+                              masks=masks)
         return msa_l, z_l
     if cfg.variant == "parallel":
         msa_out = dap_msa_branch(p, cfg, msa_l, z_l, rng=rngs[0],
-                                 deterministic=deterministic, axis_name=axis_name)
+                                 deterministic=deterministic, axis_name=axis_name,
+                                 masks=masks)
         z_out = dap_pair_branch(p, cfg, z_l, rng=rngs[1],
-                                deterministic=deterministic, axis_name=axis_name)
+                                deterministic=deterministic, axis_name=axis_name,
+                                masks=masks)
         return msa_out, z_out + opm(msa_out)
     raise ValueError(cfg.variant)
 
@@ -255,8 +295,10 @@ def unshard_outputs(msa_l, z_l, axis_name: str = AXIS):
 
 def make_dap_block_fn(n_seq_total: int = None, axis_name: str = AXIS):
     """Adapter matching the ``block_fn`` signature of ``evoformer_stack``."""
-    def block_fn(p, cfg, msa_l, z_l, *, rng=None, deterministic=True):
+    def block_fn(p, cfg, msa_l, z_l, *, rng=None, deterministic=True,
+                 masks=None):
         return dap_evoformer_block(p, cfg, msa_l, z_l, rng=rng,
                                    deterministic=deterministic,
-                                   n_seq_total=n_seq_total, axis_name=axis_name)
+                                   n_seq_total=n_seq_total, axis_name=axis_name,
+                                   masks=masks)
     return block_fn

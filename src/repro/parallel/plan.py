@@ -116,6 +116,31 @@ class ParallelPlan:
         return cls(pod=shape.get("pod", 1), data=shape.get("data", 1),
                    branch=branch, dap=dap, **kw)
 
+    def for_inference(self) -> "ParallelPlan":
+        """Derive the inference layout from a training plan (DESIGN.md §10).
+
+        Inference has no backward pass, so two of the plan's dimensions
+        change meaning:
+
+        * ``branch`` folds into ``data`` — BP's win is overlapping two
+          dependency-free branch *gradients*; a forward-only branch split
+          just halves per-device utilization, while the same two devices
+          double fold throughput as data parallelism.  ``pod`` likewise
+          collapses into plain data parallelism (there is no cross-pod
+          gradient hop to compress).
+        * ``remat='none'`` — rematerialization trades compute for backward
+          liveness; with no backward it is pure waste.
+        * ``dap`` KEEPS its extent: sharding activations is exactly what
+          long-protein buckets need (the (r, r) pair rep is the memory
+          wall either way).
+
+        The result still ``build()``s into the standard BuiltPlan; its
+        grad_sync is simply never called by the serving step.
+        """
+        return dataclasses.replace(
+            self, pod=1, data=self.pod * self.data * self.branch, branch=1,
+            remat="none", compress_pod_grads=False)
+
     # -- config interaction --------------------------------------------------
 
     def apply_to(self, cfg):
@@ -345,19 +370,19 @@ def _build(plan: ParallelPlan, mesh) -> BuiltPlan:
 
     block_fn = None
     if have_branch and have_dap:
-        def block_fn(p, c, m, z, rng=None, deterministic=True):
+        def block_fn(p, c, m, z, rng=None, deterministic=True, masks=None):
             # n_seq_total=None: derived per-stack from the shard shape x dap
             # extent — the main and extra stacks have different row counts
             return bp_lib.bp_dap_evoformer_block(
-                p, c, m, z, rng=rng, deterministic=deterministic)
+                p, c, m, z, rng=rng, deterministic=deterministic, masks=masks)
     elif have_branch:
-        def block_fn(p, c, m, z, rng=None, deterministic=True):
+        def block_fn(p, c, m, z, rng=None, deterministic=True, masks=None):
             return bp_lib.bp_evoformer_block(
-                p, c, m, z, rng=rng, deterministic=deterministic)
+                p, c, m, z, rng=rng, deterministic=deterministic, masks=masks)
     elif have_dap:
-        def block_fn(p, c, m, z, rng=None, deterministic=True):
+        def block_fn(p, c, m, z, rng=None, deterministic=True, masks=None):
             return dap_lib.dap_evoformer_block(
-                p, c, m, z, rng=rng, deterministic=deterministic)
+                p, c, m, z, rng=rng, deterministic=deterministic, masks=masks)
 
     sync_axes = ((("branch",) if have_branch else ()) +
                  (("dap",) if have_dap else ()))

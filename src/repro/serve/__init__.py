@@ -1,3 +1,5 @@
 from repro.serve.steps import (  # noqa: F401
     make_serve_step, make_prefill_step, cache_partition_rules, serve_batch_specs)
 from repro.serve.engine import DecodeEngine  # noqa: F401
+from repro.serve.fold_engine import FoldEngine, FoldRequest, FoldResult  # noqa: F401
+from repro.serve.fold_steps import Bucket, default_buckets  # noqa: F401

@@ -1,0 +1,193 @@
+"""FoldEngine: production AF2 structure-prediction serving (DESIGN.md §10).
+
+The LM side of the repo serves tokens through ``DecodeEngine``; this is the
+fold side — the first subsystem where the TRAINED trunk answers requests.
+ParaFold's observation (arXiv:2111.06340) is that large-scale AlphaFold
+prediction is dominated by scheduling/batching, not model FLOPs, so the
+engine is built around three scheduling decisions:
+
+1. **Length-bucketed compile cache** — every request is padded onto a small
+   bucket table (``fold_steps.Bucket``); one jitted step per (bucket, plan)
+   cell, counted by ``compile_misses``.  Compilations are bounded by the
+   table, never by traffic (pinned: serving a mixed-length queue compiles
+   at most once per bucket used).
+2. **Adaptive-recycling batch scheduler** — requests of one bucket are
+   micro-batched (vmap inside the step) and recycled together under
+   ``core.model.predict``'s early-exit while_loop: converged samples freeze
+   in place, the batch exits when all froze or ``max_recycle`` ran.
+   ``result.n_recycles`` records what each sample actually paid.
+3. **Plan-aware long-protein sharding** — buckets at or above
+   ``long_threshold`` residues route through ``long_plan`` (typically a
+   dap>1 inference plan: the (r, r) pair activations shard over the dap
+   axis, reusing the training DAP block_fn and the fused evo_pallas /
+   tri_mult kernels); short buckets run the replicated ``plan``.  Both are
+   normalized with ``ParallelPlan.for_inference()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve import fold_steps as fs
+
+
+@dataclasses.dataclass
+class FoldRequest:
+    rid: int
+    features: dict          # unpadded: msa_feat (s,r,f), extra_msa_feat,
+    #                         target_feat (r,f), residue_index (r,)
+
+
+@dataclasses.dataclass
+class FoldResult:
+    rid: int
+    coords: np.ndarray      # (r, 3) CA positions
+    plddt: np.ndarray       # (r,) confidence in [0, 100]
+    contact_probs: np.ndarray   # (r, r) P(d_ij <= 8A)
+    n_recycles: int         # trunk cycles this sample actually consumed
+    converged: bool         # early-exited before max_recycle
+    bucket: fs.Bucket
+    latency_s: float        # wall time of the batched step that served this
+    #                         request (every rider waits the full step; queue
+    #                         wait is not included)
+
+
+class FoldEngine:
+    """Queue-driven AF2 fold server over a fixed parameter set.
+
+    ``plan`` / ``long_plan`` are ``ParallelPlan``s (training-shaped plans
+    are accepted — ``for_inference()`` is applied internally).  With the
+    defaults (no plans, one device) the engine is the CPU-scale demo of the
+    serving layer; the same jitted steps lower at production shapes.
+    """
+
+    def __init__(self, cfg, params, *, buckets=None, plan=None,
+                 long_plan=None, long_threshold: Optional[int] = None,
+                 micro_batch: int = 2, max_recycle: Optional[int] = None,
+                 tol: float = 0.0, dtype=None, devices=None):
+        from repro.parallel.plan import ParallelPlan
+        self.cfg = cfg
+        self.params = params
+        self.buckets = sorted(buckets or fs.default_buckets(cfg))
+        if plan is None:
+            import jax
+            n = len(devices) if devices is not None else len(jax.devices())
+            plan = ParallelPlan(data=n)   # default: every device folds
+        self.plan = plan.for_inference()
+        self.long_plan = (long_plan.for_inference() if long_plan is not None
+                          else self.plan)
+        # default threshold: only the largest bucket routes to long_plan
+        self.long_threshold = (long_threshold if long_threshold is not None
+                               else self.buckets[-1].n_res)
+        self.micro_batch = micro_batch
+        self.max_recycle = max_recycle or cfg.max_recycle
+        self.tol = tol
+        self.dtype = dtype
+        self.devices = devices
+        self._steps: Dict[tuple, object] = {}   # (bucket, plan) -> jitted fn
+        self._built: Dict[object, object] = {}  # plan -> BuiltPlan
+        self.compile_misses = 0                 # jit-cache-miss counter
+        self.stats = {"requests": 0, "steps": 0, "recycles_run": 0,
+                      "recycles_budget": 0, "per_bucket": {}}
+
+    # -- plan / step cache ---------------------------------------------------
+
+    def plan_for(self, bucket: fs.Bucket):
+        return (self.long_plan if bucket.n_res >= self.long_threshold
+                else self.plan)
+
+    def _built_for(self, plan, bcfg):
+        if plan not in self._built:
+            self._built[plan] = plan.build(self.devices, cfg=bcfg)
+        return self._built[plan]
+
+    def step_for(self, bucket: fs.Bucket):
+        """The jitted fold step for this bucket — compiled once per
+        (bucket, plan) cell, counted by ``compile_misses``."""
+        plan = self.plan_for(bucket)
+        key = (bucket, plan)
+        if key not in self._steps:
+            self.compile_misses += 1
+            bcfg = plan.apply_to(fs.bucket_cfg(self.cfg, bucket))
+            plan.validate(bcfg)     # actionable: dap vs bucket divisibility
+            built = self._built_for(plan, bcfg)
+            self._steps[key] = fs.make_fold_step(
+                bcfg, built, max_recycle=self.max_recycle, tol=self.tol,
+                dtype=self.dtype)
+        return self._steps[key]
+
+    def _batch_extent(self, bucket: fs.Bucket) -> int:
+        """Global micro-batch: a multiple of the plan's data extent so the
+        shard_map batch axis divides evenly."""
+        plan = self.plan_for(bucket)
+        data = plan.pod * plan.data
+        return (self.micro_batch + data - 1) // data * data
+
+    # -- scheduler -----------------------------------------------------------
+
+    def run(self, requests: List[FoldRequest]) -> Dict[int, FoldResult]:
+        """Serve the queue to completion; returns {rid: FoldResult}.
+
+        FIFO with same-bucket skip-ahead batching: the head request picks
+        the bucket, then up to micro_batch - 1 later requests of the SAME
+        bucket ride along in its step (classic continuous-batching
+        compromise: no head-of-line blocking across buckets, bounded
+        reordering within the queue).
+        """
+        # bucket each request ONCE on entry; scheduling then only compares
+        queue = [(fs.bucket_for(self.buckets, r.features), r)
+                 for r in requests]
+        done: Dict[int, FoldResult] = {}
+        while queue:
+            bucket, head = queue.pop(0)
+            group = [head]
+            cap = self._batch_extent(bucket)
+            rest = []
+            for b, req in queue:
+                if len(group) < cap and b == bucket:
+                    group.append(req)
+                else:
+                    rest.append((b, req))
+            queue = rest
+            for req, res in zip(group, self._run_group(bucket, group)):
+                done[req.rid] = res
+        return done
+
+    def _run_group(self, bucket: fs.Bucket, group: List[FoldRequest]):
+        import jax
+        cap = self._batch_extent(bucket)
+        padded = [fs.pad_to_bucket(r.features, bucket) for r in group]
+        batch = fs.stack_padded(padded, cap)
+        step = self.step_for(bucket)
+        t0 = time.perf_counter()
+        out = step(self.params, batch)
+        out = jax.tree_util.tree_map(np.asarray, out)
+        dt = time.perf_counter() - t0
+
+        st = self.stats
+        st["requests"] += len(group)
+        st["steps"] += 1
+        st["recycles_run"] += int(out["n_recycles"][:len(group)].sum())
+        st["recycles_budget"] += self.max_recycle * len(group)
+        pb = st["per_bucket"].setdefault(
+            bucket, {"requests": 0, "steps": 0, "seconds": 0.0})
+        pb["requests"] += len(group)
+        pb["steps"] += 1
+        pb["seconds"] += dt
+
+        results = []
+        for i, req in enumerate(group):
+            r = fs.request_shapes(req.features)[0]
+            results.append(FoldResult(
+                rid=req.rid,
+                coords=out["coords"][i, :r],
+                plddt=out["plddt"][i, :r],
+                contact_probs=out["contact_probs"][i, :r, :r],
+                n_recycles=int(out["n_recycles"][i]),
+                converged=bool(out["converged"][i]),
+                bucket=bucket,
+                latency_s=dt))
+        return results

@@ -1,0 +1,176 @@
+"""Fold-serving substrate: bucket table, bucket padding, jitted predict steps.
+
+The FoldEngine's compile discipline lives here (DESIGN.md §10):
+
+* a ``Bucket`` names one compiled shape — (n_res, n_seq, n_extra_seq) pads;
+  requests map onto the SMALLEST covering bucket, so the number of XLA
+  compilations is bounded by the bucket table, never by traffic;
+* ``pad_to_bucket`` pads a request's features up to the bucket and attaches
+  the validity masks (res / MSA-row / extra-row) that ``core.model.predict``
+  threads through every cross-position op — padded folds match unpadded
+  folds to forward tolerance (tests/test_fold_engine.py);
+* ``make_fold_step`` builds the jitted (params, batch) -> outputs step for
+  one (bucket, plan) cell: plain jit + inner vmap for replicated plans, a
+  ``shard_map`` over the plan's mesh when the plan shards (batch over the
+  data axis, activations over dap inside the trunk via the plan's
+  block_fn/stack_io).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+# keys predict() returns, all with a leading batch axis — the out_specs
+# template for the shard_map wrapper (pinned by tests against predict)
+PREDICT_OUTPUT_KEYS = ("coords", "plddt", "contact_probs", "plddt_logits",
+                       "distogram_logits", "n_recycles", "converged")
+
+# feature keys a fold request must carry (unpadded, per protein)
+REQUEST_FEATURE_KEYS = ("msa_feat", "extra_msa_feat", "target_feat",
+                        "residue_index")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Bucket:
+    """One compiled shape cell: residue / MSA-row / extra-MSA-row pads.
+
+    Ordering is lexicographic on (n_res, n_seq, n_extra_seq) — exactly the
+    "smallest covering bucket" preference of :func:`bucket_for`.
+    """
+    n_res: int
+    n_seq: int
+    n_extra_seq: int
+
+    def covers(self, r: int, s: int, se: int) -> bool:
+        return self.n_res >= r and self.n_seq >= s and self.n_extra_seq >= se
+
+    def describe(self) -> str:
+        return f"r<={self.n_res} s<={self.n_seq} se<={self.n_extra_seq}"
+
+
+def default_buckets(cfg, *, fractions=(0.25, 0.5, 1.0)) -> list:
+    """Geometric bucket ladder scaled off the config's full shapes.
+
+    Residue pads shrink with the fraction; MSA-row pads are kept full-depth
+    in all but the smallest bucket (MSA depth varies less than length in
+    real traffic, and fewer distinct (s, se) pads means fewer compiles).
+    """
+    out = []
+    for f in sorted(fractions):
+        r = max(8, int(cfg.n_res * f))
+        s = cfg.n_seq if f > min(fractions) else max(4, cfg.n_seq // 2)
+        se = cfg.n_extra_seq if f > min(fractions) else max(
+            4, cfg.n_extra_seq // 2)
+        out.append(Bucket(r, s, se))
+    return sorted(set(out))
+
+
+def request_shapes(features: dict) -> tuple:
+    """(r, s, se) of an unpadded request's feature dict."""
+    r = features["target_feat"].shape[0]
+    s = features["msa_feat"].shape[0]
+    se = features["extra_msa_feat"].shape[0]
+    return r, s, se
+
+
+def bucket_for(buckets, features: dict) -> Bucket:
+    """Smallest bucket covering the request; actionable error when none does."""
+    r, s, se = request_shapes(features)
+    for b in sorted(buckets):
+        if b.covers(r, s, se):
+            return b
+    raise ValueError(
+        f"no bucket covers a request with n_res={r} n_seq={s} "
+        f"n_extra_seq={se}; bucket table: "
+        f"{[b.describe() for b in sorted(buckets)]} — add a larger bucket "
+        "to FoldEngine(buckets=...) or truncate the request's MSA")
+
+
+def bucket_cfg(cfg, bucket: Bucket):
+    """The model config compiled for this bucket (shapes only differ)."""
+    return dataclasses.replace(cfg, n_res=bucket.n_res, n_seq=bucket.n_seq,
+                               n_extra_seq=bucket.n_extra_seq)
+
+
+def pad_to_bucket(features: dict, bucket: Bucket) -> dict:
+    """Pad one request's features to the bucket and attach validity masks.
+
+    Returned dict feeds ``core.model.predict`` directly (after stacking a
+    leading batch axis): the three row masks make every cross-position op —
+    attention keys, OPM row sums, triangle k-contractions, IPA — ignore the
+    padding end to end.
+    """
+    r, s, se = request_shapes(features)
+    if not bucket.covers(r, s, se):
+        raise ValueError(f"request ({r}, {s}, {se}) does not fit bucket "
+                         f"{bucket.describe()}")
+    pr, ps, pse = bucket.n_res - r, bucket.n_seq - s, bucket.n_extra_seq - se
+    f = {k: np.asarray(features[k]) for k in REQUEST_FEATURE_KEYS}
+    out = {
+        "msa_feat": np.pad(f["msa_feat"], ((0, ps), (0, pr), (0, 0))),
+        "extra_msa_feat": np.pad(f["extra_msa_feat"],
+                                 ((0, pse), (0, pr), (0, 0))),
+        "target_feat": np.pad(f["target_feat"], ((0, pr), (0, 0))),
+        "residue_index": np.pad(f["residue_index"], (0, pr)),
+        "res_mask": np.pad(np.ones((r,), np.float32), (0, pr)),
+        "msa_row_mask": np.pad(np.ones((s,), np.float32), (0, ps)),
+        "extra_row_mask": np.pad(np.ones((se,), np.float32), (0, pse)),
+    }
+    return out
+
+
+def stack_padded(samples: list, batch: int) -> dict:
+    """Stack padded samples into a (batch, ...) dict, repeating the last
+    sample to fill unused micro-batch slots (their results are dropped)."""
+    if not samples:
+        raise ValueError("stack_padded needs at least one sample")
+    if len(samples) > batch:
+        raise ValueError(f"{len(samples)} samples > micro-batch {batch}")
+    filled = samples + [samples[-1]] * (batch - len(samples))
+    return {k: np.stack([smp[k] for smp in filled]) for k in filled[0]}
+
+
+def make_fold_step(cfg, built, *, max_recycle: int, tol: float,
+                   dtype=None):
+    """Jitted fold step for one (bucket-shaped ``cfg``, BuiltPlan) cell.
+
+    ``built`` is a ``BuiltPlan`` from an inference plan
+    (``ParallelPlan.for_inference().build(...)``).  Single-cell meshes run
+    a plain ``jit(predict)``; sharded plans wrap predict in ``shard_map``
+    over the plan's mesh — batch sharded over the data axes, params
+    replicated, the dap axis consumed inside the trunk by the plan's
+    block_fn/stack_io.  The adaptive-recycling while_loop's predicate is
+    per-device-local (no collectives), so a data shard whose samples all
+    converge exits early independently.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import model as af2
+    from repro.parallel.mesh_utils import smap
+
+    dtype = dtype or jnp.bfloat16
+
+    def step(params, batch):
+        return af2.predict(params, cfg, batch, max_recycle=max_recycle,
+                           tol=tol, block_fn=built.block_fn,
+                           stack_io=built.stack_io, dtype=dtype)
+
+    mesh = built.mesh
+    if mesh.devices.size == 1:
+        return jax.jit(step)
+
+    from jax.sharding import PartitionSpec as P
+
+    def sharded(params, batch):
+        state_specs = jax.tree_util.tree_map(lambda _: P(), params)
+        batch_specs = jax.tree_util.tree_map(lambda _: built.batch_spec,
+                                             batch)
+        out_specs = {k: built.batch_spec for k in PREDICT_OUTPUT_KEYS}
+        fn = smap(step, mesh, in_specs=(state_specs, batch_specs),
+                  out_specs=out_specs)
+        return fn(params, batch)
+
+    return jax.jit(sharded)
