@@ -18,6 +18,7 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
 DRYRUN_DIR = REPO_ROOT / "experiments" / "dryrun"
 KERNEL_JSON = REPO_ROOT / "BENCH_kernels.json"
 SERVE_JSON = REPO_ROOT / "BENCH_serve.json"
+TRAIN_JSON = REPO_ROOT / "BENCH_train.json"
 
 ROWS: list[tuple] = []
 # machine-readable kernel rows (op, shape, impl, ms, bytes) accumulated by
@@ -28,6 +29,10 @@ KERNEL_ROWS: list[dict] = []
 # accumulated by fold_bench and written to BENCH_serve.json by run.py under
 # the same only-green gating as the kernel trajectory
 SERVE_ROWS: list[dict] = []
+# training-loop rows (scenario, steps/s, compiles, loss + lDDT trajectory)
+# accumulated by train_bench and written to BENCH_train.json by run.py under
+# the same only-green gating
+TRAIN_ROWS: list[dict] = []
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -79,6 +84,20 @@ def emit_serve(scenario: str, row: dict):
 
 def write_serve_json(path=SERVE_JSON) -> None:
     rows = sorted(SERVE_ROWS, key=lambda r: r["scenario"])
+    path.write_text(json.dumps(rows, indent=1) + "\n")
+
+
+def emit_train(scenario: str, row: dict):
+    """One training-loop row: CSV echo + a structured BENCH_train.json row."""
+    TRAIN_ROWS.append(dict(scenario=scenario, **row))
+    ms = row.get("mean_step_ms", 0.0)
+    emit(f"train/{scenario}", ms * 1e3,
+         f"steps_per_s={row.get('steps_per_s', 0):.3f};"
+         f"compiles={row.get('compiles', 0)}")
+
+
+def write_train_json(path=TRAIN_JSON) -> None:
+    rows = sorted(TRAIN_ROWS, key=lambda r: r["scenario"])
     path.write_text(json.dumps(rows, indent=1) + "\n")
 
 

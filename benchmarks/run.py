@@ -5,8 +5,9 @@ import traceback
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import paper_tables, kernel_bench, fold_bench
-    suites = paper_tables.ALL + kernel_bench.ALL + fold_bench.ALL
+    from benchmarks import paper_tables, kernel_bench, fold_bench, train_bench
+    suites = (paper_tables.ALL + kernel_bench.ALL + fold_bench.ALL
+              + train_bench.ALL)
     if len(sys.argv) > 1:
         wanted = set(sys.argv[1:])
         suites = [f for f in suites if f.__name__ in wanted]
@@ -30,6 +31,11 @@ def main() -> None:
         common.write_serve_json()
         print(f"# wrote {len(common.SERVE_ROWS)} rows to "
               f"{common.SERVE_JSON}", file=sys.stderr)
+    if common.TRAIN_ROWS and not failed:
+        # same only-green gating for the training-loop trajectory
+        common.write_train_json()
+        print(f"# wrote {len(common.TRAIN_ROWS)} rows to "
+              f"{common.TRAIN_JSON}", file=sys.stderr)
     if failed:
         raise SystemExit(f"{len(failed)} benchmark(s) failed: "
                          f"{[n for n, _ in failed]}")

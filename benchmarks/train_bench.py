@@ -1,0 +1,77 @@
+"""Training-loop benchmarks: TrainRunner steps/s + lDDT-Cα trajectory.
+
+CPU-scale runner over the reduced tiny config (absolute times are
+structural, not TPU numbers — see benchmarks/common.py); each scenario
+emits a structured row to BENCH_train.json (written only by a fully-green
+benchmarks/run.py):
+
+* ``train_tiny_throughput`` — stochastic-recycling steps through ONE
+  compiled step: measures steps/s and proteins/s with the compile excluded,
+  and records the compile count (the DESIGN.md §11 contract: compiles are
+  bounded by 1, never by recycle draws).
+* ``train_tiny_lddt`` — the accuracy half of the paper's claim, in
+  miniature: loss + EMA-eval lDDT-Cα before and after a short run, the
+  trajectory the full-scale reproduction reports per ParallelPlan.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit_train
+
+
+def _runner(**kw):
+    from repro.core.config import af2_tiny
+    from repro.train.trainer import TrainRunner
+    cfg = af2_tiny(n_evoformer=1, n_extra_msa_blocks=1, n_res=8, n_seq=4,
+                   n_extra_seq=6)
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("seed", 0)
+    kw.setdefault("recycle_sample", True)
+    kw.setdefault("max_recycle", 2)
+    kw.setdefault("eval_batch_size", 2)
+    return TrainRunner(cfg, **kw)
+
+
+def train_tiny_throughput():
+    r = _runner()
+    r.run(1)                               # compile outside the timed region
+    warm_compiles = r.train_compiles
+    t0 = time.perf_counter()
+    hist = r.run(4)
+    dt = time.perf_counter() - t0
+    steps = len(hist["loss"]) - 1          # step 0 ran in the warmup
+    emit_train("train_tiny_throughput", {
+        "steps": steps,
+        "batch": r.batch_size,
+        "max_recycle": r.max_recycle,
+        "recycle_draws": hist["n_recycle"],
+        "compiles": r.train_compiles,
+        "recompiled_after_warmup": r.train_compiles != warm_compiles,
+        "mean_step_ms": round(1e3 * dt / steps, 2),
+        "steps_per_s": round(steps / dt, 4),
+        "proteins_per_s": round(steps * r.batch_size / dt, 4),
+    })
+
+
+def train_tiny_lddt():
+    r = _runner(eval_every=0)
+    start = r.evaluate()["lddt_ca"]        # untrained EMA baseline
+    t0 = time.perf_counter()
+    hist = r.run(6)
+    dt = time.perf_counter() - t0
+    end = r.evaluate()["lddt_ca"]
+    emit_train("train_tiny_lddt", {
+        "steps": len(hist["loss"]),
+        "loss_first": round(hist["loss"][0], 4),
+        "loss_last": round(hist["loss"][-1], 4),
+        "lddt_ca_start": round(start, 3),
+        "lddt_ca_end": round(end, 3),
+        "ema_decay": r.ema.decay,
+        "compiles": r.train_compiles,
+        "mean_step_ms": round(1e3 * dt / len(hist["loss"]), 2),
+        "steps_per_s": round(len(hist["loss"]) / dt, 4),
+    })
+
+
+ALL = [train_tiny_throughput, train_tiny_lddt]

@@ -29,6 +29,16 @@ ap.add_argument("--auto-plan", action="store_true",
                 help="roofline-driven DP x BP x DAP selection "
                      "(repro.parallel.plan.auto_plan)")
 ap.add_argument("--ckpt-dir", default="/tmp/af2_ckpt")
+ap.add_argument("--recycle-sample", action="store_true",
+                help="stochastic recycling (one compiled step serves all "
+                     "per-step n_recycle draws)")
+ap.add_argument("--max-recycle", type=int, default=0,
+                help="recycle-sampling upper bound (0 = cfg.max_recycle)")
+ap.add_argument("--eval-every", type=int, default=0,
+                help="EMA-eval lDDT-Cα cadence on the held-out split")
+ap.add_argument("--ema", type=float, default=0.999,
+                help="EMA decay for eval params (0 disables)")
+ap.add_argument("--seed", type=int, default=0)
 args = ap.parse_args()
 
 if args.devices:
@@ -44,6 +54,13 @@ if args.auto_plan:
     sys.argv += ["--auto-plan"]
 if args.devices:
     sys.argv += ["--devices", str(args.devices)]
+if args.recycle_sample:
+    sys.argv += ["--recycle-sample"]
+if args.eval_every:
+    sys.argv += ["--eval-every", str(args.eval_every)]
+if args.max_recycle:
+    sys.argv += ["--max-recycle", str(args.max_recycle)]
+sys.argv += ["--ema", str(args.ema), "--seed", str(args.seed)]
 
 from repro.launch.train import main  # noqa: E402
 

@@ -123,6 +123,7 @@ def main():
     doc.append(perf_section())
     doc.append(ATTENTION_IMPLS)
     doc.append(serve_section())
+    doc.append(train_section())
     doc.append(PAPER_CLAIMS)
     (ROOT / "EXPERIMENTS.md").write_text("\n".join(doc))
     print("wrote EXPERIMENTS.md")
@@ -144,6 +145,39 @@ def serve_section():
         keys = ", ".join(f"{k}={v}" for k, v in r.items() if k != "scenario")
         out.append(f"| {r['scenario']} | {keys} |")
     return "\n".join(out)
+
+
+def train_section():
+    """Training-loop rows from BENCH_train.json (benchmarks/train_bench.py,
+    written only by a fully-green benchmarks/run.py)."""
+    out = [TRAINING_PREAMBLE]
+    path = ROOT / "BENCH_train.json"
+    if not path.exists():
+        out.append("\n(no BENCH_train.json yet — run `python -m "
+                   "benchmarks.run`)\n")
+        return "\n".join(out)
+    rows = json.loads(path.read_text())
+    out.append("| scenario | key numbers |")
+    out.append("|---|---|")
+    for r in rows:
+        keys = ", ".join(f"{k}={v}" for k, v in r.items() if k != "scenario")
+        out.append(f"| {r['scenario']} | {keys} |")
+    return "\n".join(out)
+
+
+TRAINING_PREAMBLE = """
+## §Training-loop (TrainRunner)
+
+The loop that closes the paper's accuracy half (DESIGN.md §11):
+`TrainRunner` draws a stochastic per-step recycle count on host and feeds
+it to ONE compiled step as a traced fori_loop bound (compiles pinned at 1
+across draws — the training-side analogue of FoldEngine's bucket-bounded
+compile cache), carries EMA parameters for eval, and validates with the
+superposition-free lDDT-Cα on a held-out deterministic split.  CPU-scale
+numbers are structural: `train_tiny_throughput` measures post-compile
+steps/s; `train_tiny_lddt` records the loss + lDDT trajectory of a short
+run — the quantity the full-scale reproduction reports per ParallelPlan.
+"""
 
 
 SERVING_PREAMBLE = """

@@ -36,3 +36,11 @@ python -m pytest -x -q -m pallas_interpret
 # in isolation after serve/-only changes: ./scripts/run_tier1.sh -m serve
 echo "== tier-1d: serving tier (FoldEngine / predict) =="
 python -m pytest -x -q -m serve
+
+# tier-1e: the training-loop tier (marker: train) — TrainRunner one-compile
+# pin across stochastic recycle draws, EMA eval + checkpoint round-trip,
+# lDDT-Cα metric/target, per-sample clipping, dropout decorrelation.
+# Also in the main pass; standalone for trainer-only changes:
+# ./scripts/run_tier1.sh -m train
+echo "== tier-1e: training-loop tier (TrainRunner) =="
+python -m pytest -x -q -m train

@@ -49,14 +49,15 @@ def plddt_logits(p: Params, s: jnp.ndarray) -> jnp.ndarray:
 def plddt_from_logits(logits: jnp.ndarray) -> jnp.ndarray:
     """Binned-confidence logits (..., n_bins) -> per-residue pLDDT in [0, 100].
 
-    Expected value over equal-width bins.  This repo's confidence head is
-    trained on binned CA error ORDERED BY INCREASING ERROR (``plddt_loss``),
-    so bin centers descend linearly from 100 (bin 0: smallest predicted
-    error = most confident) to 0 — moving probability mass to a higher-error
-    bin strictly lowers the score (pinned by tests/test_fold_engine.py).
+    Expected value over equal-width bins.  The confidence head is trained on
+    the binned per-residue lDDT-Cα of the final structure (``plddt_loss``),
+    bins ORDERED BY INCREASING lDDT, so bin centers ascend linearly from 0
+    (bin 0: lowest predicted lDDT = least confident) to 100 — moving
+    probability mass to a higher-lDDT bin strictly raises the score (pinned
+    by tests/test_predict.py).
     """
     nb = logits.shape[-1]
-    centers = 100.0 * (1.0 - (jnp.arange(nb, dtype=jnp.float32) + 0.5) / nb)
+    centers = 100.0 * (jnp.arange(nb, dtype=jnp.float32) + 0.5) / nb
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     return jnp.einsum("...b,b->...", probs, centers)
 
@@ -77,6 +78,41 @@ def contact_probs_from_distogram(logits: jnp.ndarray, *, cutoff: float = 8.0,
     upper = jnp.concatenate([edges, jnp.array([jnp.inf])])
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     return jnp.sum(probs * (upper <= cutoff), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# lDDT-Cα (validation metric AND the pLDDT training target)
+# ---------------------------------------------------------------------------
+
+def lddt_ca(pred_coords, true_coords, res_mask, *, cutoff: float = 15.0,
+            per_residue: bool = False) -> jnp.ndarray:
+    """Superposition-free lDDT over CA atoms, in [0, 100].
+
+    Compares the two intramolecular distance matrices directly — no global
+    alignment is ever computed, so the score is invariant to the arbitrary
+    rigid pose the structure module predicts in (the reason the confidence
+    head must train on THIS and not on raw ``‖pred − true‖``).  Standard
+    lDDT definition: pairs (i, j), i != j, with true distance < ``cutoff``
+    are scored; each counts the fraction of the four tolerance thresholds
+    (0.5 / 1 / 2 / 4 Å) its absolute distance error stays under.
+
+    ``per_residue=True`` returns the (r,) per-residue profile (each residue
+    averaged over its scored pairs — the pLDDT target); otherwise one scalar
+    averaged over ALL scored pairs.  A perfect prediction scores exactly 100.
+    """
+    pc = pred_coords.astype(jnp.float32)
+    tc = true_coords.astype(jnp.float32)
+    m = res_mask.astype(jnp.float32)
+    dp = jnp.sqrt(jnp.sum(jnp.square(pc[:, None] - pc[None, :]), -1) + 1e-10)
+    dt = jnp.sqrt(jnp.sum(jnp.square(tc[:, None] - tc[None, :]), -1) + 1e-10)
+    scored = ((dt < cutoff).astype(jnp.float32) * m[:, None] * m[None, :]
+              * (1.0 - jnp.eye(dt.shape[0])))
+    l1 = jnp.abs(dt - dp)
+    frac = 0.25 * sum((l1 < t).astype(jnp.float32)
+                      for t in (0.5, 1.0, 2.0, 4.0))
+    axes = (1,) if per_residue else (0, 1)
+    return 100.0 * (jnp.sum(scored * frac, axes)
+                    / jnp.maximum(jnp.sum(scored, axes), 1e-10))
 
 
 # ---------------------------------------------------------------------------
@@ -127,10 +163,19 @@ def masked_msa_loss(logits, true_msa, mask_positions):
 
 
 def plddt_loss(logits, pred_trans, true_coords, res_mask, *, n_bins: int):
-    """Confidence head: predict binned per-residue CA error (detached target)."""
-    err = jnp.sqrt(jnp.sum(jnp.square(pred_trans - true_coords), -1) + 1e-8)
-    err = jax.lax.stop_gradient(err)
-    edges = jnp.linspace(0.5, 15.0, n_bins - 1)
-    bins = jnp.sum(err[..., None] > edges, axis=-1)
+    """Confidence head: predict the binned per-residue lDDT-Cα of the final
+    structure (detached target).
+
+    The target MUST be superposition-free: the predicted structure lives in
+    an arbitrary global pose relative to the ground truth, so raw
+    ``‖pred_trans − true_coords‖`` is meaningless (a perfect fold translated
+    by 10 Å would train the head toward zero confidence).  :func:`lddt_ca`
+    compares intramolecular distance matrices and is pose-invariant; bin b
+    covers lDDT in [b, b+1) · 100/n_bins, ASCENDING — the orientation
+    :func:`plddt_from_logits` decodes.
+    """
+    lddt = lddt_ca(pred_trans, true_coords, res_mask, per_residue=True)
+    lddt = jax.lax.stop_gradient(lddt)
+    bins = jnp.clip((lddt / 100.0 * n_bins).astype(jnp.int32), 0, n_bins - 1)
     onehot = jax.nn.one_hot(bins, n_bins)
     return softmax_xent(logits, onehot, res_mask)

@@ -224,22 +224,41 @@ def run_trunk(params, cfg: AlphaFold2Config, batch, prev, *, block_fn=None,
     return msa, z, single
 
 
-def forward(params, cfg: AlphaFold2Config, batch, *, n_recycle: int = 1,
+def cycle_rng(rng, i):
+    """Per-recycle-cycle dropout key: ``fold_in`` the cycle index.
+
+    Every cycle re-runs the same trunk, so passing one rng through would
+    draw IDENTICAL dropout masks in all no-grad cycles and the grad cycle —
+    the grad cycle's masks would be the very masks the recycled features
+    were computed under, correlated noise instead of regularization.
+    ``i`` may be traced (the stochastic-recycling fori_loop index).
+    """
+    return None if rng is None else jax.random.fold_in(rng, i)
+
+
+def forward(params, cfg: AlphaFold2Config, batch, *, n_recycle=1,
             block_fn=None, stack_io=None, rng=None,
             deterministic: bool = True, dtype=jnp.bfloat16) -> dict:
-    """Full forward with ``n_recycle`` trunk passes (grad on the last only)."""
+    """Full forward with ``n_recycle`` trunk passes (grad on the last only).
+
+    ``n_recycle`` is a static Python int OR a traced int32 scalar — the
+    stochastic-recycling training path (DESIGN.md §11) draws it per step on
+    the host and feeds it in as a step argument, so the no-grad ``fori_loop``
+    lowers to a dynamic-trip-count while_loop and ONE compiled step serves
+    every draw.  Dropout decorrelates across cycles via :func:`cycle_rng`.
+    """
     # AMP: fp32 master params -> compute dtype once at entry (paper §5.1)
     params = nn.Policy(compute_dtype=dtype).cast(params)
     r, c_m, c_z = cfg.n_res, cfg.c_m, cfg.c_z
     prev = (jnp.zeros((r, c_m), dtype), jnp.zeros((r, r, c_z), dtype),
             jnp.zeros((r, 3), jnp.float32))
 
-    def cycle(prev, stop_grad):
-        msa, z, single = run_trunk(params, cfg, batch, prev, block_fn=block_fn,
-                                   stack_io=stack_io, rng=rng,
+    def cycle(p, prev, key, stop_grad):
+        msa, z, single = run_trunk(p, cfg, batch, prev, block_fn=block_fn,
+                                   stack_io=stack_io, rng=key,
                                    deterministic=deterministic, dtype=dtype)
         (rots, trans), traj, s_final = struct.structure_module(
-            params["structure"], cfg.structure, single, z)
+            p["structure"], cfg.structure, single, z)
         out = {"msa": msa, "z": z, "single": single, "s_final": s_final,
                "rots": rots, "trans": trans, "traj": traj}
         new_prev = (msa[0], z, trans)
@@ -247,14 +266,21 @@ def forward(params, cfg: AlphaFold2Config, batch, *, n_recycle: int = 1,
             new_prev = jax.tree_util.tree_map(jax.lax.stop_gradient, new_prev)
         return out, new_prev
 
-    # n_recycle - 1 no-grad iterations (lax loop keeps HLO size constant)
-    if n_recycle > 1:
+    # n_recycle - 1 no-grad iterations (lax loop keeps HLO size constant).
+    # The loop closes over DETACHED params: with a traced bound the loop is
+    # a while_loop, which has no transpose rule — detaching every
+    # differentiated input up front keeps autodiff from ever looking inside
+    # (the recycled features are stop_gradient'ed anyway).
+    static = isinstance(n_recycle, int)
+    if not static or n_recycle > 1:
+        frozen = jax.tree_util.tree_map(jax.lax.stop_gradient, params)
+
         def body(i, prev):
-            _, new_prev = cycle(prev, True)
+            _, new_prev = cycle(frozen, prev, cycle_rng(rng, i), True)
             return new_prev
         prev = jax.lax.stop_gradient(
             jax.lax.fori_loop(0, n_recycle - 1, body, prev))
-    out, _ = cycle(prev, False)
+    out, _ = cycle(params, prev, cycle_rng(rng, n_recycle - 1), False)
     return out
 
 
@@ -353,7 +379,7 @@ def predict(params, cfg: AlphaFold2Config, batch, *, max_recycle: int,
     }
 
 
-def loss_fn(params, cfg: AlphaFold2Config, batch, *, n_recycle: int = 1,
+def loss_fn(params, cfg: AlphaFold2Config, batch, *, n_recycle=1,
             block_fn=None, stack_io=None, rng=None,
             deterministic: bool = True) -> tuple:
     out = forward(params, cfg, batch, n_recycle=n_recycle, block_fn=block_fn,

@@ -73,9 +73,25 @@ def protein_sample(key, cfg: AlphaFold2Config) -> dict:
     }
 
 
+# salt folded into every validation key: the held-out stream can never
+# collide with ANY training step's samples (train keys are fold(seed, step)
+# + split; a val key additionally folds this constant first)
+_VAL_SALT = 0x7A11DA7A
+
+
 def protein_batch(seed: int, step: int, batch_size: int,
-                  cfg: AlphaFold2Config) -> dict:
-    """Deterministic batch: sample i of step t is PRNG(fold(seed, t, i))."""
+                  cfg: AlphaFold2Config, *, split: str = "train") -> dict:
+    """Deterministic batch: sample i of step t is PRNG(fold(seed, t, i)).
+
+    ``split="val"`` draws from a disjoint deterministic stream (a fixed salt
+    folded into the key): the held-out eval set — ``step`` then indexes val
+    batches, not training steps — is identical on every host and every run
+    with the same seed, and no val sample ever appears in training.
+    """
     base = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    if split == "val":
+        base = jax.random.fold_in(base, _VAL_SALT)
+    elif split != "train":
+        raise ValueError(f"split must be 'train' or 'val', got {split!r}")
     keys = jax.random.split(base, batch_size)
     return jax.vmap(lambda k: protein_sample(k, cfg))(keys)

@@ -45,6 +45,19 @@ def main():
                     help="pick the DP x BP x DAP split from the roofline "
                          "cost model (overrides --bp/--dap)")
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--recycle-sample", action="store_true",
+                    help="AF2: stochastic recycling — per-step n_recycle ~ "
+                         "Uniform{1..max-recycle} drawn on host, fed to ONE "
+                         "compiled step as a traced bound")
+    ap.add_argument("--max-recycle", type=int, default=0,
+                    help="AF2: recycle-sampling upper bound "
+                         "(0 = cfg.max_recycle)")
+    ap.add_argument("--ema", type=float, default=0.999,
+                    help="AF2: EMA decay for eval params (0 disables)")
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="AF2: lDDT-Cα eval cadence on the held-out split "
+                         "(0 disables)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -75,13 +88,8 @@ def main():
 
 def run_af2(args, jax, jnp, np):
     from repro.core.config import af2_tiny, af2_small, af2_initial, af2_finetune
-    from repro.core import model as af2
-    from repro.data.protein import protein_batch
-    from repro.data.loader import ShardedLoader
-    from repro.train.checkpoint import CheckpointManager, StepWatchdog
     from repro.train.optim import adamw, af2_lr_schedule
-    from repro.train.trainstep import make_af2_train_step
-    from repro.parallel.grad_sync import zeros_error_state
+    from repro.train.trainer import TrainRunner
     from repro.parallel.plan import ParallelPlan, auto_plan
 
     cfg = {"tiny": af2_tiny, "small": af2_small, "initial": af2_initial,
@@ -96,59 +104,38 @@ def run_af2(args, jax, jnp, np):
             n_dev, bp=args.bp, dap=args.dap, pod=args.pods,
             variant=args.variant,
             compress_pod_grads=args.compress_pod_grads)
-    cfg = plan.apply_to(cfg)
 
-    opt = adamw(af2_lr_schedule(args.lr, warmup_steps=100), clip_norm=0.1)
-    params = af2.init_params(jax.random.PRNGKey(0), cfg)
-    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
-    step_fn, built = make_af2_train_step(
-        cfg, opt, plan, n_recycle=1, deterministic=False)
+    # paper §5.2 / AF2 suppl. 1.11.3: clip each SAMPLE's gradient at 0.1
+    opt = adamw(af2_lr_schedule(args.lr, warmup_steps=100),
+                per_sample_clip=0.1)
+    runner = TrainRunner(
+        cfg, plan, optimizer=opt, batch_size=args.batch, seed=args.seed,
+        recycle_sample=args.recycle_sample,
+        max_recycle=args.max_recycle or None,
+        ema_decay=args.ema or None, eval_every=args.eval_every,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        install_sigterm=True, deterministic=False,
+        on_straggler=lambda s, dt, ema: print(
+            f"  [watchdog] step {s} took {dt:.2f}s (EMA {ema:.2f}s)"))
+    n_params = sum(x.size for x in
+                   jax.tree_util.tree_leaves(runner.state["params"]))
     print(f"{plan.describe()}")
-    print(f"mesh: {dict(built.mesh.shape)}  devices={n_dev}")
-    print(f"params: {n_params:,}")
-    state = {"params": params, "opt": opt.init(params)}
-    if args.compress_pod_grads:
-        state["err"] = zeros_error_state(params)
+    print(f"mesh: {dict(runner.built.mesh.shape)}  devices={n_dev}")
+    print(f"params: {n_params:,}  recycle_sample={args.recycle_sample} "
+          f"(max {runner.max_recycle})  ema={args.ema or 'off'}")
+    if args.ckpt_dir and args.resume:
+        try:
+            print(f"resumed from step {runner.restore(adapt_plan=args.adapt_plan)}")
+        except FileNotFoundError:
+            pass
 
-    start = 0
-    mgr = None
-    if args.ckpt_dir:
-        mgr = CheckpointManager(args.ckpt_dir, keep=3, install_sigterm=True,
-                                plan_meta=built.metadata())
-        if args.resume:
-            try:
-                state, start = mgr.restore_latest(
-                    state, adapt_plan=args.adapt_plan)
-                print(f"resumed from step {start}")
-            except FileNotFoundError:
-                pass
-
-    fn = jax.jit(step_fn, donate_argnums=(0,))
-    wd = StepWatchdog(on_straggler=lambda s, dt, ema: print(
-        f"  [watchdog] step {s} took {dt:.2f}s (EMA {ema:.2f}s)"))
-    loader = ShardedLoader(lambda s: protein_batch(0, s, args.batch, cfg),
-                           start_step=start)
     t_start = time.time()
-    try:
-        for step, batch in loader:
-            if step >= args.steps:
-                break
-            wd.start_step()
-            state, metrics = fn(state, batch, jax.random.PRNGKey(step))
-            loss = float(metrics["loss"])
-            wd.end_step(step)
-            if step % args.log_every == 0:
-                print(f"step {step:5d}  loss {loss:.4f}  "
-                      f"({args.batch / max(wd.ema or 1e-9, 1e-9):.2f} protein/s)")
-            if mgr and step and step % args.ckpt_every == 0:
-                mgr.save(step, state)
-    finally:
-        loader.close()
-    if mgr:
-        mgr.save(args.steps, state)
-        mgr.wait()
+    runner.run(args.steps, log_every=args.log_every)
+    evals = runner.history["eval"]
     print(f"done: {args.steps} steps in {time.time() - t_start:.1f}s; "
-          f"stragglers flagged: {len(wd.flagged)}")
+          f"train compiles: {runner.train_compiles}; stragglers flagged: "
+          f"{len(runner.watchdog.flagged)}"
+          + (f"; final lDDT-Cα {evals[-1]['lddt_ca']:.2f}" if evals else ""))
 
 
 def run_lm(args, jax, jnp, np):

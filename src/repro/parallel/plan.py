@@ -356,6 +356,27 @@ def _region_exit_fn(factor: float):
     return region_exit
 
 
+def complete_partial_grads(grads, sync_axes):
+    """psum the PARTIAL gradient subtrees over the branch/dap axes
+    (DESIGN.md §2): the stacks and everything upstream of them, minus the
+    post-exchange ``single_proj``.  Shared by ``BuiltPlan.grad_sync`` (the
+    once-per-step batched completion) and the per-sample clipping path in
+    ``make_af2_train_step`` (which must measure the norm of the COMPLETED
+    sample gradient — a shard's partial-grad norm is not it)."""
+    import jax
+    if not sync_axes:
+        return grads
+    grads = dict(grads)
+    partial = {k: grads[k] for k in PARTIAL_GRAD_KEYS if k != "embedder"}
+    emb = dict(grads["embedder"])
+    complete_emb = {k: emb.pop(k) for k in COMPLETE_EMBEDDER_KEYS}
+    partial["embedder"] = emb
+    partial = jax.lax.psum(partial, sync_axes)
+    partial["embedder"].update(complete_emb)
+    grads.update(partial)
+    return grads
+
+
 def _build(plan: ParallelPlan, mesh) -> BuiltPlan:
     import jax
     from jax.sharding import PartitionSpec as P
@@ -406,7 +427,7 @@ def _build(plan: ParallelPlan, mesh) -> BuiltPlan:
     compress = plan.compress_pod_grads and "pod" in axis_names
     npods = mesh.shape.get("pod", 1) if "pod" in axis_names else 1
 
-    def grad_sync(grads, err=None):
+    def grad_sync(grads, err=None, *, completed=False):
         """Complete + reduce gradients (inside shard_map; DESIGN.md §2):
         grads of the Evoformer stacks AND of everything upstream of them
         (embedder) are PARTIAL across branch/dap devices (each device
@@ -414,16 +435,13 @@ def _build(plan: ParallelPlan, mesh) -> BuiltPlan:
         ``sync_axes`` completes them; grads of post-exchange consumers
         (single_proj / structure / heads) are already identical and stay
         untouched; every grad then pmeans over the DP axes, optionally
-        int8-error-feedback-compressed on the pod hop."""
-        if sync_axes:
-            grads = dict(grads)
-            partial = {k: grads[k] for k in PARTIAL_GRAD_KEYS if k != "embedder"}
-            emb = dict(grads["embedder"])
-            complete_emb = {k: emb.pop(k) for k in COMPLETE_EMBEDDER_KEYS}
-            partial["embedder"] = emb
-            partial = jax.lax.psum(partial, sync_axes)
-            partial["embedder"].update(complete_emb)
-            grads.update(partial)
+        int8-error-feedback-compressed on the pod hop.
+
+        ``completed=True`` skips the completing psum — the per-sample
+        clipping path already completed each sample's gradient inside its
+        scan (re-psumming would multiply by the group size)."""
+        if not completed:
+            grads = complete_partial_grads(grads, sync_axes)
         if compress and err is not None:
             inner = tuple(a for a in dp_axes if a != "pod")
             if inner:

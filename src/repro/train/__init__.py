@@ -1,3 +1,4 @@
 from repro.train.optim import (  # noqa: F401
-    adamw, sgd, adafactor_like, OptState, clip_by_global_norm,
+    adamw, sgd, adafactor_like, ema, Ema, OptState, clip_by_global_norm,
     warmup_cosine, warmup_constant, af2_lr_schedule)
+from repro.train.trainer import TrainRunner  # noqa: F401

@@ -29,6 +29,14 @@ class OptState(NamedTuple):
 class Optimizer:
     init: Callable[[Params], OptState]
     update: Callable[..., tuple]
+    # per-SAMPLE gradient clip threshold (AF2 suppl. 1.11.3: 0.1 by sample).
+    # The optimizer itself never applies this — it is a hook read by the
+    # train step, which clips each protein's gradient inside its per-sample
+    # scan BEFORE accumulation/DP reduction.  Contrast ``clip_norm`` (an
+    # adamw/sgd kwarg), which clips the already-accumulated batch gradient
+    # at update time; the two regimes differ whenever samples have unequal
+    # gradient norms (pinned by tests/test_trainer.py).
+    per_sample_clip: float | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -83,12 +91,44 @@ def clip_by_global_norm(grads, max_norm: float):
 
 
 # ---------------------------------------------------------------------------
+# EMA parameters (eval-time weights; AF2 suppl. 1.11.7 uses decay 0.999)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Ema:
+    """Exponential moving average of the parameters, carried in train state
+    alongside the raw copy and used for EVAL ONLY — the optimizer keeps
+    stepping the raw params.  State is fp32 regardless of param dtype (the
+    same AMP master-copy convention as OptState)."""
+    decay: float = 0.999
+
+    def init(self, params: Params) -> Params:
+        # jnp.array (not asarray): fp32 params must COPY, or state['ema']
+        # would alias state['params'] and break buffer donation
+        return jax.tree_util.tree_map(
+            lambda p: jnp.array(p, jnp.float32), params)
+
+    def update(self, ema_params: Params, params: Params) -> Params:
+        d = self.decay
+        return jax.tree_util.tree_map(
+            lambda e, p: d * e + (1.0 - d) * p.astype(jnp.float32),
+            ema_params, params)
+
+
+def ema(decay: float = 0.999) -> Ema:
+    if not 0.0 < decay < 1.0:
+        raise ValueError(f"ema decay must be in (0, 1), got {decay}")
+    return Ema(decay)
+
+
+# ---------------------------------------------------------------------------
 # AdamW (the AF2 optimizer is Adam; weight decay off by default)
 # ---------------------------------------------------------------------------
 
 def adamw(lr: Schedule | float, *, b1: float = 0.9, b2: float = 0.999,
           eps: float = 1e-8, weight_decay: float = 0.0,
-          clip_norm: float | None = None) -> Optimizer:
+          clip_norm: float | None = None,
+          per_sample_clip: float | None = None) -> Optimizer:
     sched: Schedule = lr if callable(lr) else (lambda s: jnp.asarray(lr))
 
     def init(params):
@@ -126,11 +166,13 @@ def adamw(lr: Schedule | float, *, b1: float = 0.9, b2: float = 0.999,
         new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
         return new_p, OptState(step=step, mu=new_m, nu=new_v)
 
-    return Optimizer(init=init, update=update)
+    return Optimizer(init=init, update=update,
+                     per_sample_clip=per_sample_clip)
 
 
 def sgd(lr: Schedule | float, *, momentum: float = 0.0,
-        clip_norm: float | None = None) -> Optimizer:
+        clip_norm: float | None = None,
+        per_sample_clip: float | None = None) -> Optimizer:
     sched: Schedule = lr if callable(lr) else (lambda s: jnp.asarray(lr))
 
     def init(params):
@@ -157,11 +199,13 @@ def sgd(lr: Schedule | float, *, momentum: float = 0.0,
         new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
         return new_p, OptState(step=step, mu=new_m, nu=state.nu)
 
-    return Optimizer(init=init, update=update)
+    return Optimizer(init=init, update=update,
+                     per_sample_clip=per_sample_clip)
 
 
 def adafactor_like(lr: Schedule | float, *, eps: float = 1e-30,
-                   clip_norm: float | None = None) -> Optimizer:
+                   clip_norm: float | None = None,
+                   per_sample_clip: float | None = None) -> Optimizer:
     """Factored second-moment optimizer (Shazeer & Stern) for O(n+m) state.
 
     Used for the 100B-scale assigned archs where full Adam state would not
@@ -217,4 +261,5 @@ def adafactor_like(lr: Schedule | float, *, eps: float = 1e-30,
         new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
         return new_p, OptState(step=step, mu=state.mu, nu=new_v)
 
-    return Optimizer(init=init, update=update)
+    return Optimizer(init=init, update=update,
+                     per_sample_clip=per_sample_clip)

@@ -154,7 +154,7 @@ def _opt_branch_shardings(params_shapes, pspecs, branch_shapes, mesh):
 
 def make_af2_train_step(cfg, optimizer: Optimizer, plan, *,
                         n_recycle: int = 1, deterministic: bool = True,
-                        devices=None):
+                        devices=None, ema=None):
     """Paper-faithful AF2 distributed training step, laid out by a
     ``ParallelPlan`` (repro.parallel.plan — the single source of truth for
     mesh axes, block_fn, stack_io and gradient reduction).
@@ -166,12 +166,27 @@ def make_af2_train_step(cfg, optimizer: Optimizer, plan, *,
     computation via the plan's block_fn/stack_io; gradient completion and
     reduction via the plan's grad_sync (DESIGN.md §2).
 
+    The returned step is ``train_step(state, batch, rng, n_recycle=None)``:
+    the optional last argument is a traced int32 recycle count (stochastic
+    recycling, DESIGN.md §11) overriding the factory's static ``n_recycle``
+    — ONE compiled step serves every draw because the bound only feeds
+    ``forward``'s fori_loop.
+
+    ``optimizer.per_sample_clip`` moves gradient clipping INSIDE the
+    per-protein scan (AF2 suppl. 1.11.3 clips each sample at 0.1 before
+    accumulation); without it the batch gradient is clipped at update time.
+    ``ema`` (repro.train.optim.Ema) makes the step carry ``state['ema']``
+    — eval-time parameters updated after every optimizer step.
+
     Returns ``(train_step, built)`` — ``built.mesh`` / ``built.batch_spec``
     are what launchers need for sharding and logging.
     """
+    from jax.sharding import PartitionSpec as P
     from repro.core import model as af2
     from repro.parallel.mesh_utils import smap
-    from repro.parallel.plan import BuiltPlan, ParallelPlan
+    from repro.parallel.plan import (BuiltPlan, ParallelPlan,
+                                     complete_partial_grads)
+    from repro.train.optim import clip_by_global_norm
 
     if isinstance(plan, ParallelPlan):
         built = plan.build(devices, cfg=cfg)
@@ -183,43 +198,76 @@ def make_af2_train_step(cfg, optimizer: Optimizer, plan, *,
             f"{type(plan).__name__}: construct one with ParallelPlan(...), "
             "ParallelPlan.from_flags(...) or auto_plan(...)")
     mesh, dp_axes = built.mesh, built.dp_axes
+    per_sample_clip = getattr(optimizer, "per_sample_clip", None)
 
-    def per_protein_loss(params, sample, rng):
+    def per_protein_loss(params, sample, rng, n_rec):
         return af2.loss_fn(
-            params, cfg, sample, n_recycle=n_recycle,
+            params, cfg, sample, n_recycle=n_rec,
             block_fn=built.block_fn, stack_io=built.stack_io, rng=rng,
             deterministic=deterministic)
 
-    def step_body(state, batch, rng):
+    def step_body(state, batch, rng, n_rec):
         params, opt, err = state["params"], state["opt"], state.get("err")
         # decorrelate dropout across DP shards
         dp_idx = jnp.zeros((), jnp.int32)
         for a in dp_axes:
             dp_idx = dp_idx * mesh.shape[a] + jax.lax.axis_index(a)
         rng = jax.random.fold_in(rng, dp_idx)
+        n_local = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        rngs = jax.random.split(rng, n_local)
 
-        def local_loss(params):
-            # local shard of the global batch: proteins scanned sequentially
-            # (paper: 1 protein per device group; scan = grad accumulation)
-            def one(c, sample_rng):
+        if per_sample_clip is None:
+            def local_loss(params):
+                # local shard of the global batch: proteins scanned
+                # sequentially (paper: 1 protein per device group; scan =
+                # grad accumulation)
+                def one(c, sample_rng):
+                    sample, r = sample_rng
+                    l, m = per_protein_loss(params, sample, r, n_rec)
+                    return c + l, m
+                total, metrics = jax.lax.scan(
+                    one, jnp.zeros((), jnp.float32), (batch, rngs))
+                metrics = jax.tree_util.tree_map(jnp.mean, metrics)
+                return total / n_local, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                local_loss, has_aux=True)(params)
+        else:
+            # per-sample clipping (AF2 suppl. 1.11.3): each protein's
+            # gradient is clipped to per_sample_clip global norm BEFORE
+            # accumulation — the same scan, but value_and_grad moves inside
+            # so every sample's gradient exists on its own for one moment.
+            # Under BP/DAP the per-shard grad is PARTIAL (DESIGN.md §2) and
+            # its norm is NOT the sample's norm, so the completing psum
+            # moves inside the scan too (grad_sync then skips it) — the
+            # clip measures the true sample gradient on every layout.
+            def one(carry, sample_rng):
                 sample, r = sample_rng
-                l, m = per_protein_loss(params, sample, r)
-                return c + l, m
-            n_local = jax.tree_util.tree_leaves(batch)[0].shape[0]
-            rngs = jax.random.split(rng, n_local)
-            total, metrics = jax.lax.scan(
-                one, jnp.zeros((), jnp.float32), (batch, rngs))
+                acc_l, acc_g = carry
+                (l, m), g = jax.value_and_grad(
+                    per_protein_loss, has_aux=True)(params, sample, r, n_rec)
+                g = complete_partial_grads(g, built.sync_axes)
+                g, _ = clip_by_global_norm(g, per_sample_clip)
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_l + l, acc_g), m
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (total, grads), metrics = jax.lax.scan(
+                one, (jnp.zeros((), jnp.float32), zeros), (batch, rngs))
+            loss = total / n_local
+            grads = jax.tree_util.tree_map(lambda g: g / n_local, grads)
             metrics = jax.tree_util.tree_map(jnp.mean, metrics)
-            return total / n_local, metrics
 
-        (loss, metrics), grads = jax.value_and_grad(
-            local_loss, has_aux=True)(params)
-        grads, err = built.grad_sync(grads, err)
+        grads, err = built.grad_sync(grads, err,
+                                     completed=per_sample_clip is not None)
         if dp_axes:
             loss = jax.lax.pmean(loss, dp_axes)
             metrics = jax.lax.pmean(metrics, dp_axes)
         new_params, new_opt = optimizer.update(grads, opt, params)
         out = {"params": new_params, "opt": new_opt}
+        if ema is not None:
+            out["ema"] = ema.update(state["ema"], new_params)
         if err is not None:
             out["err"] = err
         metrics = dict(metrics)
@@ -229,12 +277,21 @@ def make_af2_train_step(cfg, optimizer: Optimizer, plan, *,
     # shard_map wrapper: batch sharded over dp axes on dim 0, rest replicated
     batch_spec, state_spec = built.batch_spec, built.state_spec
 
-    def train_step(state, batch, rng):
+    def train_step(state, batch, rng, n_recycle_t=None):
         batch_specs = jax.tree_util.tree_map(lambda _: batch_spec, batch)
         state_specs = jax.tree_util.tree_map(lambda _: state_spec, state)
+        if n_recycle_t is None:
+            # static path: the factory's Python-int bound stays a closure
+            # constant, so ``forward`` keeps its unrolled/scan recycling —
+            # no dead dynamic while_loop in the HLO of legacy callers
+            fn = smap(lambda s, b, r: step_body(s, b, r, n_recycle), mesh,
+                      in_specs=(state_specs, batch_specs, state_spec),
+                      out_specs=(state_specs, state_spec))
+            return fn(state, batch, rng)
+        nr = jnp.asarray(n_recycle_t, jnp.int32)
         fn = smap(step_body, mesh,
-                  in_specs=(state_specs, batch_specs, state_spec),
+                  in_specs=(state_specs, batch_specs, state_spec, P()),
                   out_specs=(state_specs, state_spec))
-        return fn(state, batch, rng)
+        return fn(state, batch, rng, nr)
 
     return train_step, built

@@ -39,14 +39,14 @@ def _batchify(*samples):
 
 def test_plddt_from_logits_range_and_monotonicity():
     nb = 50
-    # certain mass in bin b -> score descends strictly as b grows (bins are
-    # ordered by increasing predicted CA error), always inside [0, 100]
+    # certain mass in bin b -> score ascends strictly as b grows (bins are
+    # ordered by increasing lDDT-Cα, the plddt_loss target), inside [0, 100]
     eye = 40.0 * jnp.eye(nb)
     scores = heads_lib.plddt_from_logits(eye)
     assert scores.shape == (nb,)
     assert float(scores.min()) >= 0.0 and float(scores.max()) <= 100.0
-    assert np.all(np.diff(np.asarray(scores)) < 0), \
-        "mass in a higher-error bin must strictly lower pLDDT"
+    assert np.all(np.diff(np.asarray(scores)) > 0), \
+        "mass in a higher-lDDT bin must strictly raise pLDDT"
     # uniform logits -> expected value of symmetric centers = 50
     flat = heads_lib.plddt_from_logits(jnp.zeros((3, nb)))
     np.testing.assert_allclose(np.asarray(flat), 50.0, atol=1e-4)
