@@ -1,16 +1,49 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import argparse
+import json
 import sys
 import traceback
 
 
+def compare_kernel_rows(baseline: list, fresh: list, tol: float = 0.10):
+    """Regressions of previously-committed BENCH_kernels.json rows.
+
+    A row regresses when its fresh ms exceeds the committed ms by more than
+    ``tol``.  Rows new in this run (no committed counterpart) and rows that
+    vanished (suite filtered out) are ignored — only a previously-committed
+    row getting slower fails."""
+    old = {(r["op"], r["shape"], r["impl"]): r["ms"] for r in baseline}
+    out = []
+    for r in fresh:
+        key = (r["op"], r["shape"], r["impl"])
+        if key in old and old[key] > 0 and r["ms"] > old[key] * (1 + tol):
+            out.append((key, old[key], r["ms"]))
+    return out
+
+
 def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="Run benchmark suites; positional names filter suites.")
+    ap.add_argument("suites", nargs="*",
+                    help="suite function names to run (default: all)")
+    ap.add_argument("--compare", action="store_true",
+                    help="diff fresh kernel rows against the committed "
+                         "BENCH_kernels.json trajectory; fail (and keep the "
+                         "committed file) on any >10%% regression of a "
+                         "previously-committed row")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     from benchmarks import paper_tables, kernel_bench, fold_bench, train_bench
+    from benchmarks import common
     suites = (paper_tables.ALL + kernel_bench.ALL + fold_bench.ALL
               + train_bench.ALL)
-    if len(sys.argv) > 1:
-        wanted = set(sys.argv[1:])
+    if args.suites:
+        wanted = set(args.suites)
         suites = [f for f in suites if f.__name__ in wanted]
+    baseline = []
+    if args.compare and common.KERNEL_JSON.exists():
+        baseline = json.loads(common.KERNEL_JSON.read_text())
     failed = []
     for fn in suites:
         try:
@@ -19,7 +52,19 @@ def main() -> None:
             failed.append((fn.__name__, e))
             print(f"{fn.__name__},0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
-    from benchmarks import common
+    if args.compare and not failed:
+        regressions = compare_kernel_rows(baseline, common.KERNEL_ROWS)
+        if regressions:
+            for (op, shape, impl), old_ms, new_ms in regressions:
+                print(f"# REGRESSION {op}/{shape}/{impl}: "
+                      f"{old_ms}ms -> {new_ms}ms "
+                      f"({new_ms / old_ms - 1:+.0%})", file=sys.stderr)
+            raise SystemExit(
+                f"{len(regressions)} kernel row(s) regressed >10% vs the "
+                "committed trajectory; BENCH_kernels.json left untouched")
+        print(f"# compare: {len(common.KERNEL_ROWS)} fresh rows vs "
+              f"{len(baseline)} committed, no >10% regressions",
+              file=sys.stderr)
     if common.KERNEL_ROWS and not failed:
         # only a fully-green run may overwrite the committed trajectories —
         # a partial row set would read as kernels regressing out of existence

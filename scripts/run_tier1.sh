@@ -44,3 +44,14 @@ python -m pytest -x -q -m serve
 # ./scripts/run_tier1.sh -m train
 echo "== tier-1e: training-loop tier (TrainRunner) =="
 python -m pytest -x -q -m train
+
+# tier-1f: the parallel-equivalence suite with the communication-overlapped
+# DAP schedule FORCED on (REPRO_FORCE_OVERLAP_DAP=1 rewrites every eligible
+# dap>1, branch==1 plan in the matrix to overlap_dap=True) — the
+# double-buffered prefetch carry re-proves the serial-SGD oracle on 8 fake
+# host devices, so the overlapped schedule can't drift numerically even if
+# nobody passes --overlap-dap in CI configs.
+echo "== tier-1f: overlapped-DAP forced (REPRO_FORCE_OVERLAP_DAP=1) =="
+REPRO_FORCE_OVERLAP_DAP=1 python -m pytest -x -q \
+  tests/test_parallel_equiv.py::test_af2_train_step_plan_matrix_vs_oracle \
+  tests/test_parallel_equiv.py::test_dap_overlap_collective_counts_and_bitwise_equality

@@ -18,6 +18,13 @@ class HW:
     # per-op intensity (paper §4.2: BP "retains the same computational
     # intensity", DAP does not)
     tile_rows: float = 256.0
+    # fraction of DAP's collective time the overlapped schedule hides behind
+    # compute (communication-overlapped DAP, DESIGN.md §3): 1.0 would be the
+    # ideal max(compute, comm) composition, 0.0 the sync sum.  0.5 reflects
+    # that only the prefetch gather is issued a full block early — the
+    # intra-block transposes/gathers rely on the async-collective scheduler
+    # finding shorter-range slack (the --print-tpu-env preset)
+    overlap_eff: float = 0.5
 
 
 def roofline_terms(*, total_flops: float, total_bytes: float,
@@ -164,22 +171,35 @@ def evo_branch_flops(cfg) -> tuple:
     return msa_branch, pair_branch
 
 
-def dap_comm_bytes(cfg, dap: int, *, elt: int = 2) -> tuple:
+def dap_comm_bytes(cfg, dap: int, *, elt: int = 2,
+                   overlap: bool = False) -> tuple:
     """(msa_branch, pair_branch) per-device fwd collective bytes for one
     block at DAP extent ``dap`` — the schedule of repro.parallel.dap:
     tiled all_gathers receive (d-1)/d of the FULL tensor, all_to_alls move
-    (d-1)/d of a 1/d shard."""
+    (d-1)/d of a 1/d shard.  ``elt`` is the activation element size in
+    bytes (2 = bf16, 4 = fp32) and scales EVERY leg, including the OPM
+    all_to_alls.
+
+    ``overlap=True`` prices the communication-overlapped schedule
+    (DESIGN.md §3): the row-attention bias gather and the tri-mult-out
+    operand gather are replaced by ONE prefetch gather of the (r, r, c_z)
+    block-output pair rep, issued a block ahead of its consumer."""
     if dap <= 1:
         return 0.0, 0.0
     e = cfg.evoformer
     s, r, d = cfg.n_seq, cfg.n_res, dap
     gather = (d - 1) / d
     a2a = (d - 1) / (d * d)
-    msa = (e.n_head_msa * r * r * gather          # row-attn bias gather
+    bias_gather = 0.0 if overlap else e.n_head_msa * r * r * gather
+    msa = (bias_gather                            # row-attn bias gather
            + 2 * s * r * e.c_m * a2a              # col-attn transpose + back
            + s * r * e.c_hidden_opm * a2a         # OPM: a -> residue shards
            + s * r * e.c_hidden_opm * (a2a + gather)) * elt  # OPM: b full
-    pair = (2 * r * r * e.c_hidden_mul * gather   # tri-mult b gathers (x2)
+    # sync: two tri-mult operand gathers; overlap: tri-mult-in's gather plus
+    # the (r, r, c_z) prefetch gather replacing tri-mult-out's
+    tri_gathers = ((r * r * e.c_hidden_mul + r * r * e.c_z) if overlap
+                   else 2 * r * r * e.c_hidden_mul) * gather
+    pair = (tri_gathers
             + r * r * e.c_hidden_mul * a2a        # tri-mult-in a transpose
             + 2 * e.n_head_pair * r * r * gather  # tri-att bias gathers (x2)
             + 2 * r * r * e.c_z * a2a) * elt      # end-att transpose + back
@@ -187,9 +207,14 @@ def dap_comm_bytes(cfg, dap: int, *, elt: int = 2) -> tuple:
 
 
 # DAP collectives per block fwd (the repro.parallel.dap schedule): under the
-# BP x DAP hybrid each device only issues its own branch's share
+# BP x DAP hybrid each device only issues its own branch's share.  The
+# overlapped schedule drops the row-attn bias gather (consumed from the
+# prefetch) and swaps tri-mult-out's gather for the block-end prefetch
+# issue: 6+7=13 dispatches -> 5+7=12.
 _N_DAP_COLLECTIVES_MSA = 6
 _N_DAP_COLLECTIVES_PAIR = 7
+_N_DAP_COLLECTIVES_MSA_OVERLAP = 5
+_N_DAP_COLLECTIVES_PAIR_OVERLAP = 7
 
 
 def bp_exchange_bytes(cfg, dap: int = 1, *, elt: int = 2) -> float:
@@ -203,7 +228,8 @@ def bp_exchange_bytes(cfg, dap: int = 1, *, elt: int = 2) -> float:
 
 
 def estimate_block_time(cfg, *, bp: int = 1, dap: int = 1, hw: HW = HW(),
-                        fwd_bwd: bool = True) -> float:
+                        fwd_bwd: bool = True, elt: int = 2,
+                        overlap: bool = None) -> float:
     """Roofline seconds for one main-Evoformer block per device under a
     (BP, DAP) split.  Captures the three effects that decide the paper's
     Table 5/6 preferences:
@@ -222,24 +248,54 @@ def estimate_block_time(cfg, *, bp: int = 1, dap: int = 1, hw: HW = HW(),
     block — this is how ``auto_plan`` sees a kernel-impl change.  Memory is
     overlapped with compute (``max``), the classic roofline composition.
 
+    ``elt`` is the activation element size in bytes (2 = bf16 AMP, 4 =
+    fp32), plumbed through every byte term — comm bytes, BP's exchange, the
+    triangle-mult HBM traffic.
+
+    ``overlap`` prices the communication-overlapped DAP schedule
+    (DESIGN.md §3, ``ParallelPlan.overlap_dap``): instead of ADDING comm
+    time to compute, the two partially MAX-compose,
+
+        t = eff * max(C, M) + (1 - eff) * (C + M),   eff = hw.overlap_eff
+
+    (eff=1 is the ideal roofline max, eff=0 degenerates to the sync sum),
+    over the overlapped schedule's smaller collective budget
+    (``dap_comm_bytes(..., overlap=True)``, 12 dispatches instead of 13).
+    None auto-resolves like the plan layer: ON for a pure-DAP split of the
+    'parallel' variant, OFF for the hybrid (no carry across cond arms) and
+    serial variants.
+
     ``fwd_bwd`` scales compute x3 and communication x2 (backward re-runs the
     collective schedule once; matmul backward is ~2x forward FLOPs)."""
+    if overlap is None:
+        overlap = (dap > 1 and bp == 1
+                   and cfg.evoformer.variant == "parallel")
     f_msa, f_pair = evo_branch_flops(cfg)
     d = max(dap, 1)
     eff_msa = min(1.0, (cfg.n_seq / d) / hw.tile_rows)
     eff_pair = min(1.0, (cfg.n_res / d) / hw.tile_rows)
     t_msa = f_msa / d / (hw.peak_flops * eff_msa)
     t_pair = max(f_pair / d / (hw.peak_flops * eff_pair),
-                 tri_mult_hbm_bytes(cfg, dap=d) / hw.hbm_bw)
-    b_msa, b_pair = dap_comm_bytes(cfg, d)
+                 tri_mult_hbm_bytes(cfg, dap=d, elt=elt) / hw.hbm_bw)
+    b_msa, b_pair = dap_comm_bytes(cfg, d, elt=elt, overlap=overlap)
     kc, kb = (3.0, 2.0) if fwd_bwd else (1.0, 1.0)
-    a_msa = (_N_DAP_COLLECTIVES_MSA * hw.coll_launch) if d > 1 else 0.0
-    a_pair = (_N_DAP_COLLECTIVES_PAIR * hw.coll_launch) if d > 1 else 0.0
+    n_msa = (_N_DAP_COLLECTIVES_MSA_OVERLAP if overlap
+             else _N_DAP_COLLECTIVES_MSA)
+    n_pair = (_N_DAP_COLLECTIVES_PAIR_OVERLAP if overlap
+              else _N_DAP_COLLECTIVES_PAIR)
+    a_msa = (n_msa * hw.coll_launch) if d > 1 else 0.0
+    a_pair = (n_pair * hw.coll_launch) if d > 1 else 0.0
     c_msa = b_msa / hw.ici_bw + a_msa
     c_pair = b_pair / hw.ici_bw + a_pair
     if bp > 1:
         t = max(kc * t_msa + kb * c_msa, kc * t_pair + kb * c_pair) + \
-            kb * (bp_exchange_bytes(cfg, d) / hw.ici_bw + hw.coll_launch)
+            kb * (bp_exchange_bytes(cfg, d, elt=elt) / hw.ici_bw +
+                  hw.coll_launch)
+    elif overlap and d > 1:
+        comp = kc * (t_msa + t_pair)
+        comm = kb * (c_msa + c_pair)
+        t = hw.overlap_eff * max(comp, comm) + \
+            (1.0 - hw.overlap_eff) * (comp + comm)
     else:
         t = kc * (t_msa + t_pair) + kb * (c_msa + c_pair)
     return t

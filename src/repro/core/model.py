@@ -101,19 +101,45 @@ def evoformer_stack(params, cfg_block, n_blocks: int, msa, z, *, scan: bool,
                     remat: bool, block_fn: Optional[BlockFn] = None,
                     rng=None, deterministic: bool = True,
                     masks: Optional[evo.EvoMasks] = None):
-    """Apply n_blocks Evoformer blocks (scan over stacked params)."""
+    """Apply n_blocks Evoformer blocks (scan over stacked params).
+
+    Overlap protocol (communication-overlapped DAP, DESIGN.md §3): a
+    block_fn exposing a ``prefetch_init`` attribute opts into a
+    double-buffered prefetch carry.  The stack seeds it once at entry
+    (``prefetch_init(msa, z)`` — one extra gather per stack), then each
+    block consumes the carried operand and returns the next one as a third
+    output — so the gather for block k+1 is issued inside block k's body,
+    a full block of compute ahead of its consumer.  The scan carry is what
+    makes this double-buffered: the prefetched tensor materializes at the
+    iteration boundary, and XLA's async-collective pipelining hoists the
+    gather's start across the loop back-edge.  (The LAST block's issue
+    gather is the stack's exit ``all_gather`` arriving one op early.)
+    """
     fn = block_fn or evo.evoformer_block
+    prefetch_init = getattr(fn, "prefetch_init", None)
 
     # masks only reach the block when present (inference) — training-path
     # block_fns predating the masks kwarg keep working unchanged
     mask_kw = {} if masks is None else {"masks": masks}
 
-    def one_block(carry, xs):
-        msa, z = carry
-        block_params, key = xs
-        m, zz = fn(block_params, cfg_block, msa, z, rng=key,
-                   deterministic=deterministic, **mask_kw)
-        return (m.astype(msa.dtype), zz.astype(z.dtype)), None
+    if prefetch_init is None:
+        def one_block(carry, xs):
+            msa, z = carry
+            block_params, key = xs
+            m, zz = fn(block_params, cfg_block, msa, z, rng=key,
+                       deterministic=deterministic, **mask_kw)
+            return (m.astype(msa.dtype), zz.astype(z.dtype)), None
+        carry0 = (msa, z)
+    else:
+        def one_block(carry, xs):
+            msa, z, pf = carry
+            block_params, key = xs
+            m, zz, pf = fn(block_params, cfg_block, msa, z, rng=key,
+                           deterministic=deterministic, prefetch=pf,
+                           **mask_kw)
+            return (m.astype(msa.dtype), zz.astype(z.dtype),
+                    pf.astype(z.dtype)), None
+        carry0 = (msa, z, prefetch_init(msa, z))
 
     if remat == "dots":
         # §Perf H3 iteration 3: selective remat — matmul outputs are saved,
@@ -127,17 +153,18 @@ def evoformer_stack(params, cfg_block, n_blocks: int, msa, z, *, scan: bool,
     if scan:
         if rng is not None:
             keys = jax.random.split(rng, n_blocks)
-            (msa, z), _ = jax.lax.scan(
-                lambda c, xs: one_block(c, xs), (msa, z), (params, keys))
+            carry, _ = jax.lax.scan(
+                lambda c, xs: one_block(c, xs), carry0, (params, keys))
         else:
-            (msa, z), _ = jax.lax.scan(
-                lambda c, bp: one_block(c, (bp, None)), (msa, z), params)
-        return msa, z
+            carry, _ = jax.lax.scan(
+                lambda c, bp: one_block(c, (bp, None)), carry0, params)
+        return carry[0], carry[1]
 
+    carry = carry0
     for i, bp in enumerate(params):
         key = jax.random.fold_in(rng, i) if rng is not None else None
-        (msa, z), _ = one_block((msa, z), (bp, key))
-    return msa, z
+        carry, _ = one_block(carry, (bp, key))
+    return carry[0], carry[1]
 
 
 # ---------------------------------------------------------------------------

@@ -25,6 +25,31 @@ import os
 import sys
 import time
 
+# Async-collective-fusion preset for TPU pods (SNIPPETS.md Snippet 3): lets
+# XLA issue DAP's all_gather/all_to_all as async pairs and schedule compute
+# between start/done — the compiler-level half of the overlapped-DAP
+# schedule (ParallelPlan.overlap_dap reorders the ops so there IS compute to
+# slot in; these flags let the scheduler actually hide the transfer).
+# Emitted by --print-tpu-env; eval the output in the launch shell:
+#   eval "$(python -m repro.launch.train --print-tpu-env)"
+TPU_ASYNC_COLLECTIVE_FLAGS = (
+    "--xla_tpu_enable_flash_attention=false",
+    "--xla_tpu_enable_async_collective_fusion=true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+    "--xla_tpu_enable_async_collective_fusion_multiple_steps=true",
+    "--xla_tpu_overlap_compute_collective_tc=true",
+    "--xla_enable_async_all_gather=true",
+    "--xla_tpu_scoped_vmem_limit_kib=98304",
+    "--xla_tpu_enable_all_experimental_scheduler_features=true",
+    "--xla_tpu_enable_scheduler_memory_pressure_tracking=true",
+)
+
+
+def print_tpu_env():
+    print("# async collective fusion preset (overlapped-DAP schedule): "
+          "eval this in the launch shell")
+    print(f"export LIBTPU_INIT_ARGS='{' '.join(TPU_ASYNC_COLLECTIVE_FLAGS)}'")
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -44,6 +69,15 @@ def main():
     ap.add_argument("--auto-plan", action="store_true",
                     help="pick the DP x BP x DAP split from the roofline "
                          "cost model (overrides --bp/--dap)")
+    ap.add_argument("--overlap-dap", choices=["auto", "on", "off"],
+                    default="auto",
+                    help="communication-overlapped DAP schedule (double-"
+                         "buffered prefetch carry): 'auto' enables it for "
+                         "pure-DAP 'parallel' groups, 'on'/'off' force it "
+                         "(on is rejected for hybrid/serial plans)")
+    ap.add_argument("--print-tpu-env", action="store_true",
+                    help="print the LIBTPU_INIT_ARGS async-collective-fusion "
+                         "preset (shell-eval'able) and exit")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--recycle-sample", action="store_true",
@@ -67,6 +101,10 @@ def main():
     ap.add_argument("--compress-pod-grads", action="store_true")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
+
+    if args.print_tpu_env:
+        print_tpu_env()
+        return
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -95,14 +133,15 @@ def run_af2(args, jax, jnp, np):
     cfg = {"tiny": af2_tiny, "small": af2_small, "initial": af2_initial,
            "finetune": af2_finetune}[args.af2]()
     n_dev = len(jax.devices())
+    overlap = {"auto": None, "on": True, "off": False}[args.overlap_dap]
     if args.auto_plan:
         plan = auto_plan(n_dev, cfg, global_batch=args.batch, pod=args.pods,
-                         variant=args.variant,
+                         variant=args.variant, overlap_dap=overlap,
                          compress_pod_grads=args.compress_pod_grads)
     else:
         plan = ParallelPlan.from_flags(
             n_dev, bp=args.bp, dap=args.dap, pod=args.pods,
-            variant=args.variant,
+            variant=args.variant, overlap_dap=overlap,
             compress_pod_grads=args.compress_pod_grads)
 
     # paper §5.2 / AF2 suppl. 1.11.3: clip each SAMPLE's gradient at 0.1

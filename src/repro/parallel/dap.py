@@ -18,6 +18,18 @@ our roofline reproduces — while at fine-tuning shapes DAP wins back.
 
 All functions run inside ``shard_map``; ``msa_l`` is (s/d, r, c_m) and
 ``z_l`` is (r/d, r, c_z).
+
+Communication-overlapped schedule (``make_dap_block_fn(overlap=True)``,
+FastFold's duplex idiom; DESIGN.md §3): the 'parallel' variant's branches
+both consume the BLOCK-INPUT pair rep, so the block can carry
+``z_full == all_gather(z_l)`` prefetched during the PREVIOUS block's
+compute.  Consuming it replaces two head-of-block gathers (row-attention
+bias, tri-mult-out operand) with replicated per-position math — bitwise
+identical, because LayerNorm/dense commute elementwise with
+gather-as-concat — and the single replacement gather (of the block's output
+``z_l``) is issued at the body's end, a full block of compute ahead of its
+consumer, where XLA's async-collective pipelining (see
+``launch.train --print-tpu-env``) hides it.
 """
 from __future__ import annotations
 
@@ -53,18 +65,27 @@ def _untranspose_shards(x, axis_name=AXIS):
 
 def dap_msa_branch(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
                    deterministic: bool = True, axis_name: str = AXIS,
-                   masks=None):
+                   masks=None, z_full=None):
     """``masks`` (``evo.EvoMasks``, padded-bucket inference): DAP shards the
     QUERY axes only — every masked (key) axis is consumed at full extent, so
-    the full-length masks thread straight through (DESIGN.md §10)."""
+    the full-length masks thread straight through (DESIGN.md §10).
+
+    ``z_full`` (overlap schedule): the prefetched ``all_gather(z_l)`` from
+    the previous block's issue phase.  When present, the row-attention bias
+    is projected from it directly (per-position LN+dense on the gathered
+    tensor == gather of the per-shard projection, bitwise) — no collective
+    on this block's critical path."""
     kw = dict(attention_impl=cfg.attention_impl,
               attention_chunk=cfg.attention_chunk)
     res_mask = rows_mask = None
     if masks is not None:
         rows_mask, res_mask = masks.rows, masks.res
-    # row attention: local over s-shard; bias gathered over the i-shard
-    bias_l = evo.project_attention_bias(p["row_attn"], z_l)    # (h, r/d, r)
-    bias = _all_gather(bias_l, axis_name, axis=1)              # (h, r, r)
+    if z_full is not None:
+        bias = evo.project_attention_bias(p["row_attn"], z_full)  # (h, r, r)
+    else:
+        # row attention: local over s-shard; bias gathered over the i-shard
+        bias_l = evo.project_attention_bias(p["row_attn"], z_l)  # (h, r/d, r)
+        bias = _all_gather(bias_l, axis_name, axis=1)            # (h, r, r)
     upd = evo.gated_attention(p["row_attn"], msa_l, n_head=cfg.n_head_msa,
                               c_hidden=cfg.c_hidden_att, bias=bias,
                               key_mask=res_mask, **kw)
@@ -140,7 +161,8 @@ def dap_outer_product_mean(p, msa_l, n_seq_total: int = None,
 # ---------------------------------------------------------------------------
 
 def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS,
-                      impl: str = "reference", chunk: int = 64, k_mask=None):
+                      impl: str = "reference", chunk: int = 64, k_mask=None,
+                      z_full=None):
     """Triangle mult on an i-sharded pair rep (z_l (r/d, r, c_z)).
 
     ``k_mask`` (r, full extent) drops padded residues from the
@@ -154,12 +176,22 @@ def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS,
     of (r, r, c_mul) (identical bytes at paper shapes, c_z == c_mul == 128),
     and the projections happen inside the fused core on the gathered rows,
     so the kernel runs unchanged on row-sharded tiles (DESIGN.md §9).
+
+    ``z_full`` (overlap schedule; only valid when ``z_l`` IS the block-input
+    pair rep, i.e. the tri-mult-out of the 'parallel' variant): the
+    prefetched full pair rep.  The gathered operand is then computed from it
+    by replicated per-position math instead of an ``all_gather`` —
+    LayerNorm/projections commute elementwise with gather-as-concat, so the
+    result is bitwise identical to the sync schedule.
     """
     if impl not in ("reference", "chunked", "pallas"):
         raise ValueError(f"unknown tri_mult impl {impl!r}")
     if impl in ("chunked", "pallas"):
         x_l = nn.layernorm(p["ln_in"], z_l)                    # (r/d, r, cz)
-        x_full = _all_gather(x_l, axis_name, axis=0)           # (r, r, cz)
+        if z_full is not None:
+            x_full = nn.layernorm(p["ln_in"], z_full)          # (r, r, cz)
+        else:
+            x_full = _all_gather(x_l, axis_name, axis=0)       # (r, r, cz)
         if outgoing:
             # out[i_l, j] = sum_k a(x[i_l, k]) b(x[j, k])
             xa, xb = x_l, x_full
@@ -181,8 +213,14 @@ def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS,
     a = jax.nn.sigmoid(nn.dense(p["a_gate"], x)) * nn.dense(p["a"], x)
     b = jax.nn.sigmoid(nn.dense(p["b_gate"], x)) * nn.dense(p["b"], x)
     if outgoing:
-        # out[i_l, j] = sum_k a[i_l, k] b[j, k]: gather b rows
-        b_full = _all_gather(b, axis_name, axis=0)             # (r, r, c)
+        # out[i_l, j] = sum_k a[i_l, k] b[j, k]: gather b rows — or, under
+        # the overlap schedule, project b from the prefetched full rep
+        if z_full is not None:
+            xf = nn.layernorm(p["ln_in"], z_full)
+            b_full = jax.nn.sigmoid(nn.dense(p["b_gate"], xf)) * \
+                nn.dense(p["b"], xf)                           # (r, r, c)
+        else:
+            b_full = _all_gather(b, axis_name, axis=0)         # (r, r, c)
         if k_mask is not None:
             a = a * k_mask.astype(a.dtype)[None, :, None]
         o = jnp.einsum("ikc,jkc->ijc", a, b_full,
@@ -203,7 +241,10 @@ def dap_triangle_mult(p, z_l, *, outgoing: bool, axis_name: str = AXIS,
 
 def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
                     deterministic: bool = True, axis_name: str = AXIS,
-                    masks=None):
+                    masks=None, z_full=None):
+    """``z_full`` (overlap schedule): prefetched gather of the BLOCK-INPUT
+    pair rep, consumed by the first triangle mult (whose input is exactly
+    the block input under the 'parallel' variant)."""
     kw = dict(attention_impl=cfg.attention_impl,
               attention_chunk=cfg.attention_chunk)
     res_mask = masks.res if masks is not None else None
@@ -218,7 +259,8 @@ def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
     tri_kw = dict(axis_name=axis_name, impl=cfg.tri_mult_impl,
                   chunk=cfg.tri_mult_chunk, k_mask=res_mask)
     z_l = z_l + drop(0, dap_triangle_mult(p["tri_mul_out"], z_l,
-                                          outgoing=True, **tri_kw), 0)
+                                          outgoing=True, z_full=z_full,
+                                          **tri_kw), 0)
     z_l = z_l + drop(1, dap_triangle_mult(p["tri_mul_in"], z_l,
                                           outgoing=False, **tri_kw), 0)
     # starting-node attention: rows local, bias gathered
@@ -228,10 +270,14 @@ def dap_pair_branch(p, cfg: EvoformerConfig, z_l, *, rng=None,
                               c_hidden=cfg.c_hidden_pair_att, bias=bias,
                               key_mask=res_mask, **kw)
     z_l = z_l + drop(2, att, 0)
-    # ending-node attention: transpose shards, attend, transpose back
+    # ending-node attention.  The bias is projected from the PRE-transpose
+    # shard and gathered over i — elementwise-identical to projecting the
+    # transposed shard (LN/dense are per-position), but this way the bias
+    # gather does not serially depend on the all_to_all: both collectives
+    # are in flight together (the issue half of the duplex schedule)
+    bias_t = _all_gather(evo.project_attention_bias(p["tri_att_end"], z_l),
+                         axis_name, axis=1).swapaxes(1, 2)     # (h, r[j], r[i])
     zt_l = _transpose_shards(z_l, axis_name).swapaxes(0, 1)    # (r/d[j], r[i], c)
-    bias_t = _all_gather(evo.project_attention_bias(p["tri_att_end"], zt_l),
-                         axis_name, axis=1)
     att_t = evo.gated_attention(p["tri_att_end"], zt_l, n_head=cfg.n_head_pair,
                                 c_hidden=cfg.c_hidden_pair_att, bias=bias_t,
                                 key_mask=res_mask, **kw)
@@ -283,6 +329,49 @@ def dap_evoformer_block(p, cfg: EvoformerConfig, msa_l, z_l, *, rng=None,
     raise ValueError(cfg.variant)
 
 
+def dap_evoformer_block_overlap(p, cfg: EvoformerConfig, msa_l, z_l, z_full,
+                                *, rng=None, deterministic: bool = True,
+                                n_seq_total: int = None,
+                                axis_name: str = AXIS, masks=None):
+    """Communication-overlapped 'parallel'-variant block (DESIGN.md §3).
+
+    Consume phase: ``z_full`` (the prefetched ``all_gather`` of this block's
+    input pair rep, issued by the PREVIOUS block) feeds the row-attention
+    bias and the tri-mult-out gathered operand as replicated per-position
+    math — the two head-of-block gathers of the sync schedule disappear.
+    Issue phase: the gather of the block's OUTPUT pair rep starts at the
+    body's end, a full block of compute ahead of its consumer.  Net: one
+    fewer collective per block, and the remaining prefetch gather sits where
+    XLA's async-collective pipelining can hide it (the
+    ``--print-tpu-env`` preset).  Bitwise-identical to the sync schedule:
+    every replaced collective is a gather of a per-position map's output,
+    and per-position maps commute with gather-as-concat.
+
+    Only the 'parallel' variant qualifies: its MSA and pair branches both
+    consume the BLOCK-INPUT pair rep (af2/multimer feed the pair branch a
+    mid-block ``z``, for which no prefetch can exist).
+    """
+    if cfg.variant != "parallel":
+        raise ValueError(
+            f"the overlapped DAP schedule requires the 'parallel' Evoformer "
+            f"variant (both branches consume the block-input pair rep); got "
+            f"variant={cfg.variant!r} — use overlap_dap=False or "
+            "variant='parallel'")
+    rngs = (None, None) if rng is None else tuple(jax.random.split(rng))
+    row_mask = masks.rows if masks is not None else None
+    msa_out = dap_msa_branch(p, cfg, msa_l, z_l, rng=rngs[0],
+                             deterministic=deterministic, axis_name=axis_name,
+                             masks=masks, z_full=z_full)
+    z_out = dap_pair_branch(p, cfg, z_l, rng=rngs[1],
+                            deterministic=deterministic, axis_name=axis_name,
+                            masks=masks, z_full=z_full)
+    z_out = z_out + dap_outer_product_mean(
+        p["opm"], msa_out, n_seq_total, axis_name, row_chunk=cfg.opm_chunk,
+        opm_impl=cfg.opm_impl, row_mask=row_mask)
+    z_full_next = _all_gather(z_out, axis_name, 0)             # issue half
+    return msa_out, z_out, z_full_next
+
+
 def shard_inputs(msa, z, axis_name: str = AXIS):
     """Slice full (replicated) reps into this device's DAP shards."""
     from repro.parallel.mesh_utils import local_slice
@@ -293,12 +382,31 @@ def unshard_outputs(msa_l, z_l, axis_name: str = AXIS):
     return _all_gather(msa_l, axis_name, 0), _all_gather(z_l, axis_name, 0)
 
 
-def make_dap_block_fn(n_seq_total: int = None, axis_name: str = AXIS):
-    """Adapter matching the ``block_fn`` signature of ``evoformer_stack``."""
+def make_dap_block_fn(n_seq_total: int = None, axis_name: str = AXIS,
+                      overlap: bool = False):
+    """Adapter matching the ``block_fn`` signature of ``evoformer_stack``.
+
+    With ``overlap=True`` the returned block_fn follows the stack's
+    prefetch-carry protocol: it exposes ``prefetch_init`` (the stack-entry
+    seed gather) and takes/returns the double-buffered ``prefetch`` operand
+    (``z_full == all_gather(z_l)``) alongside (msa, z).
+    """
+    if not overlap:
+        def block_fn(p, cfg, msa_l, z_l, *, rng=None, deterministic=True,
+                     masks=None):
+            return dap_evoformer_block(p, cfg, msa_l, z_l, rng=rng,
+                                       deterministic=deterministic,
+                                       n_seq_total=n_seq_total,
+                                       axis_name=axis_name, masks=masks)
+        return block_fn
+
     def block_fn(p, cfg, msa_l, z_l, *, rng=None, deterministic=True,
-                 masks=None):
-        return dap_evoformer_block(p, cfg, msa_l, z_l, rng=rng,
-                                   deterministic=deterministic,
-                                   n_seq_total=n_seq_total, axis_name=axis_name,
-                                   masks=masks)
+                 masks=None, prefetch=None):
+        return dap_evoformer_block_overlap(
+            p, cfg, msa_l, z_l, prefetch, rng=rng,
+            deterministic=deterministic, n_seq_total=n_seq_total,
+            axis_name=axis_name, masks=masks)
+
+    block_fn.prefetch_init = lambda msa_l, z_l: _all_gather(
+        z_l, axis_name, 0)
     return block_fn

@@ -64,6 +64,13 @@ class ParallelPlan:
     tri_mult_impl: Optional[str] = None
     remat: Optional[str] = None
     compress_pod_grads: bool = False
+    # communication-overlapped DAP (double-buffered prefetch carry through
+    # the stack scan; DESIGN.md §3).  None = auto: ON whenever dap>1 on a
+    # pure-DAP group with the 'parallel' variant (the only variant whose
+    # branches both consume the block-input pair rep — the prefetch
+    # invariant).  The BP x DAP hybrid keeps the sync schedule (the cond-arm
+    # structure precludes a shared carry), as do serial variants.
+    overlap_dap: Optional[bool] = None
 
     # -- derived ------------------------------------------------------------
 
@@ -89,6 +96,8 @@ class ParallelPlan:
                 parts.append(f"{k}={v}")
         if self.compress_pod_grads:
             parts.append("compress_pod_grads")
+        if self.overlap_dap is not None:
+            parts.append(f"overlap_dap={'on' if self.overlap_dap else 'off'}")
         return f"ParallelPlan[{' '.join(parts)}] ({self.n_devices} devices)"
 
     # -- construction helpers ------------------------------------------------
@@ -132,7 +141,10 @@ class ParallelPlan:
           liveness; with no backward it is pure waste.
         * ``dap`` KEEPS its extent: sharding activations is exactly what
           long-protein buckets need (the (r, r) pair rep is the memory
-          wall either way).
+          wall either way).  ``overlap_dap`` carries over unchanged — with
+          ``branch`` folded away the long-bucket data x dap route
+          auto-resolves overlap ON, hiding the per-block gathers behind
+          the forward compute exactly as in training.
 
         The result still ``build()``s into the standard BuiltPlan; its
         grad_sync is simply never called by the serving step.
@@ -163,6 +175,20 @@ class ParallelPlan:
         if self.variant is not None:
             return self.variant
         return cfg.evoformer.variant if cfg is not None else None
+
+    def resolve_overlap(self, cfg=None) -> bool:
+        """The overlapped-DAP decision actually built (DESIGN.md §3).
+
+        Explicit ``overlap_dap`` wins; None auto-resolves to ON for a
+        pure-DAP group (dap>1, branch==1) running the 'parallel' variant —
+        the prefetch carry's invariant needs both branches to consume the
+        block-input pair rep.  With no config in hand (variant unknowable)
+        auto resolves OFF: the sync schedule is always correct.
+        """
+        if self.overlap_dap is not None:
+            return self.overlap_dap
+        return (self.dap > 1 and self.branch == 1
+                and self._effective_variant(cfg) == "parallel")
 
     # -- validation ----------------------------------------------------------
 
@@ -196,6 +222,26 @@ class ParallelPlan:
                 "compress_pod_grads targets the cross-pod gradient hop but "
                 "the plan has pod=1 — set pod>1 (e.g. --pods 2) or drop "
                 "compression")
+        if self.overlap_dap:
+            if self.dap < 2:
+                raise PlanError(
+                    "overlap_dap=True overlaps DAP's collectives with "
+                    f"compute, but the plan has dap={self.dap} (no DAP "
+                    "collectives to overlap) — raise dap or leave "
+                    "overlap_dap=None")
+            if self.branch > 1:
+                raise PlanError(
+                    f"overlap_dap=True is not supported under the BP x DAP "
+                    f"hybrid (branch={self.branch}): the cond-arm branch "
+                    "dispatch precludes the shared prefetch carry — leave "
+                    "overlap_dap=None (the hybrid keeps the sync schedule)")
+            if variant not in (None, "parallel"):
+                raise PlanError(
+                    f"overlap_dap=True requires the 'parallel' Evoformer "
+                    f"variant, got {variant!r}: only the parallel block "
+                    "feeds BOTH branches the block-input pair rep, the "
+                    "invariant the prefetched gather relies on — set "
+                    "plan.variant='parallel' or leave overlap_dap=None")
         if cfg is not None and self.dap > 1:
             for name, extent in (("n_seq", cfg.n_seq),
                                  ("n_extra_seq", cfg.n_extra_seq),
@@ -240,7 +286,7 @@ class ParallelPlan:
                 import jax
                 devices = jax.devices()
             mesh = self._make_mesh(devices)
-        return _build(self, mesh)
+        return _build(self, mesh, cfg)
 
     def _make_mesh(self, devices: Sequence):
         import jax
@@ -377,7 +423,7 @@ def complete_partial_grads(grads, sync_axes):
     return grads
 
 
-def _build(plan: ParallelPlan, mesh) -> BuiltPlan:
+def _build(plan: ParallelPlan, mesh, cfg=None) -> BuiltPlan:
     import jax
     from jax.sharding import PartitionSpec as P
     from repro.parallel import branch as bp_lib
@@ -401,9 +447,10 @@ def _build(plan: ParallelPlan, mesh) -> BuiltPlan:
             return bp_lib.bp_evoformer_block(
                 p, c, m, z, rng=rng, deterministic=deterministic, masks=masks)
     elif have_dap:
-        def block_fn(p, c, m, z, rng=None, deterministic=True, masks=None):
-            return dap_lib.dap_evoformer_block(
-                p, c, m, z, rng=rng, deterministic=deterministic, masks=masks)
+        # overlap carries the prefetch protocol (block_fn.prefetch_init +
+        # the extra prefetch carry through the stack scan, DESIGN.md §3)
+        block_fn = dap_lib.make_dap_block_fn(
+            overlap=plan.resolve_overlap(cfg))
 
     sync_axes = ((("branch",) if have_branch else ()) +
                  (("dap",) if have_dap else ()))
@@ -488,6 +535,7 @@ def auto_plan(n_devices: int, cfg, *, global_batch: int = 128, pod: int = 1,
         raise PlanError(f"pod={pod} does not divide n_devices={n_devices}")
     per_pod = n_devices // pod
     variant = plan_kw.get("variant") or cfg.evoformer.variant
+    want_overlap = plan_kw.get("overlap_dap")
     infeasible = []
     for group in _divisors(per_pod):
         dp = pod * (per_pod // group)
@@ -501,11 +549,21 @@ def auto_plan(n_devices: int, cfg, *, global_batch: int = 128, pod: int = 1,
             if bp > 1 and variant != "parallel":
                 infeasible.append(f"bp={bp} (variant={variant!r})")
                 continue
+            if bp > 1 and want_overlap:
+                # explicit overlap_dap=True excludes the hybrid (validate
+                # would reject it: no prefetch carry across cond arms)
+                infeasible.append(f"bp={bp} (overlap_dap=True)")
+                continue
             if any(extent % dap for extent in
                    (cfg.n_seq, cfg.n_extra_seq, cfg.n_res)):
                 infeasible.append(f"dap={dap} (indivisible shapes)")
                 continue
-            t = estimate_block_time(cfg, bp=bp, dap=dap, hw=hw)
+            # score each candidate under the schedule it would actually
+            # build: the overlapped comm model for pure-DAP 'parallel'
+            # groups, the sync additive model otherwise
+            ov = (want_overlap if want_overlap is not None else
+                  (bp == 1 and dap > 1 and variant == "parallel"))
+            t = estimate_block_time(cfg, bp=bp, dap=dap, hw=hw, overlap=ov)
             cands.append((t, bp, dap))
         if not cands:
             continue

@@ -50,6 +50,77 @@ def test_roofline_terms_dominance():
     assert t2["dominant"] == "memory" and abs(t2["memory_s"] - 10.0) < 1e-9
 
 
+def test_dap_comm_bytes_elt_plumbed_every_leg():
+    """Satellite of the overlap work: ``elt`` must scale EVERY collective
+    leg — the OPM all_to_all legs used to hardcode bf16 at call sites, so an
+    fp32 plan under-priced DAP comm by up to 2x on the MSA branch."""
+    from repro.analysis.roofline import dap_comm_bytes
+    from repro.core.config import af2_finetune
+    cfg = af2_finetune()
+    for overlap in (False, True):
+        m2, p2 = dap_comm_bytes(cfg, 4, elt=2, overlap=overlap)
+        m4, p4 = dap_comm_bytes(cfg, 4, elt=4, overlap=overlap)
+        assert m4 == 2 * m2 and p4 == 2 * p2, (overlap, m2, m4, p2, p4)
+    # overlap re-prices: the msa branch drops its bias gather entirely...
+    m_sync, p_sync = dap_comm_bytes(cfg, 4, elt=2)
+    m_ov, p_ov = dap_comm_bytes(cfg, 4, elt=2, overlap=True)
+    assert m_ov < m_sync
+    # ...while the pair branch swaps a c_mul gather for the (r,r,c_z)
+    # prefetch gather (c_z > c_hidden_mul at AF2 shapes -> more bytes there)
+    e = cfg.evoformer
+    gather = 3 / 4
+    assert abs((p_ov - p_sync) -
+               (e.c_z - e.c_hidden_mul) * cfg.n_res**2 * gather * 2) < 1e-6
+    assert dap_comm_bytes(cfg, 1) == (0.0, 0.0)
+
+
+def test_estimate_block_time_overlap_max_composes():
+    """The overlap model partially max-composes comm with compute
+    (t = eff*max(C,M) + (1-eff)*(C+M)): never slower than sync, bounded
+    below by the ideal full-overlap max, and monotone in HW.overlap_eff."""
+    from repro.analysis.roofline import estimate_block_time
+    from repro.core.config import af2_finetune
+    cfg = af2_finetune()  # variant='parallel': overlap auto-resolves ON
+    sync = estimate_block_time(cfg, dap=4, overlap=False)
+    auto = estimate_block_time(cfg, dap=4)
+    ov = estimate_block_time(cfg, dap=4, overlap=True)
+    assert auto == ov, "overlap=None must auto-resolve ON for pure DAP"
+    assert ov < sync
+    ideal = estimate_block_time(cfg, dap=4, overlap=True,
+                                hw=HW(overlap_eff=1.0))
+    none_ = estimate_block_time(cfg, dap=4, overlap=True,
+                                hw=HW(overlap_eff=0.0))
+    assert ideal < ov
+    # eff=0 degenerates to the sum — equal to sync up to the overlapped
+    # schedule's (smaller) collective budget
+    assert ov < none_
+    # the hybrid and serial variants keep the sync schedule under auto
+    assert estimate_block_time(cfg, bp=2, dap=2) == \
+        estimate_block_time(cfg, bp=2, dap=2, overlap=False)
+    from repro.core.config import af2_finetune as _ft
+    cfg_af2 = _ft(variant="af2")
+    assert estimate_block_time(cfg_af2, dap=4) == \
+        estimate_block_time(cfg_af2, dap=4, overlap=False)
+    # elt reaches estimate_block_time's byte terms too
+    assert estimate_block_time(cfg, dap=4, elt=4) > \
+        estimate_block_time(cfg, dap=4, elt=2)
+
+
+def test_bench_compare_kernel_rows():
+    """benchmarks/run.py --compare: only a previously-committed row getting
+    >10% slower regresses; new and vanished rows are ignored."""
+    from benchmarks.run import compare_kernel_rows
+    base = [{"op": "a", "shape": "s", "impl": "x", "ms": 1.0},
+            {"op": "b", "shape": "s", "impl": "x", "ms": 2.0},
+            {"op": "gone", "shape": "s", "impl": "x", "ms": 3.0}]
+    fresh = [{"op": "a", "shape": "s", "impl": "x", "ms": 1.05},   # +5%: ok
+             {"op": "b", "shape": "s", "impl": "x", "ms": 2.5},    # +25%
+             {"op": "new", "shape": "s", "impl": "x", "ms": 9.9}]  # no base
+    regs = compare_kernel_rows(base, fresh)
+    assert [k for k, _, _ in regs] == [("b", "s", "x")]
+    assert compare_kernel_rows(base, base) == []
+
+
 def test_model_flops_moe_counts_active_only():
     moe = cfglib.get_config("phi3.5-moe-42b-a6.6b")
     dense_equal = cfglib.get_config("glm4-9b")

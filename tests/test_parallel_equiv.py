@@ -154,6 +154,82 @@ print("DAP evo_pallas fwd+grad ok")
 """, devices=2, timeout=560)
 
 
+def test_dap_overlap_collective_counts_and_bitwise_equality():
+    """Satellites of the overlapped-DAP schedule, pinned at the jaxpr level:
+
+    * per block the overlap schedule issues exactly ONE fewer `all_gather`
+      than the sync schedule (the replicated z_full prefetch replaces both
+      the row-attention bias gather and the tri-mult-outgoing operand
+      gather, at the price of the single z_full issue gather), for both
+      triangle-mult impls;
+    * `all_to_all` counts are untouched (the end-bias hoist moves the bias
+      projection off the transpose critical path without adding traffic);
+    * on a real 2-block scan stack, the overlapped schedule is BITWISE
+      identical to the sync one — gather-as-concat commutes with the
+      per-position LN/dense math it was hoisted across.
+    """
+    run_subprocess("""
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.config import af2_tiny
+from repro.core import model as af2
+from repro.parallel import dap as dap_lib
+from repro.parallel.mesh_utils import smap
+from tests.util import count_prims, randomize
+
+cfg = af2_tiny(variant="parallel")
+s, r = cfg.n_seq, cfg.n_res
+mesh = jax.make_mesh((2,), ("dap",))
+
+# --- per-block collective counts (prefetch passed as an input so the count
+# reflects steady-state blocks; the one-off seed gather lives in the stack) --
+EXPECT = {  # impl -> (sync all_gather, overlap all_gather, all_to_all)
+    "reference": (6, 5, 7),
+    "chunked":   (6, 5, 6),
+}
+for impl, (ag_sync, ag_ov, a2a) in EXPECT.items():
+    ev = dataclasses.replace(cfg.evoformer, tri_mult_impl=impl)
+    params = af2.stack_init(jax.random.PRNGKey(0), ev, 1, scan=False)[0]
+    msa = jnp.zeros((s, r, ev.c_m)); z = jnp.zeros((r, r, ev.c_z))
+    for overlap, want_ag in ((False, ag_sync), (True, ag_ov)):
+        bf = dap_lib.make_dap_block_fn(s, overlap=overlap)
+        def one(p, m, zz, zf):
+            m_l, z_l = dap_lib.shard_inputs(m, zz)
+            if overlap:
+                return bf(p, ev, m_l, z_l, prefetch=zf)
+            return bf(p, ev, m_l, z_l)
+        out_specs = (P("dap"), P("dap"), P()) if overlap else (P("dap"), P("dap"))
+        jaxpr = jax.make_jaxpr(smap(one, mesh, (P(), P(), P(), P()), out_specs))(
+            params, msa, z, z)
+        got = count_prims(jaxpr, {"all_gather", "all_to_all"})
+        mode = "overlap" if overlap else "sync"
+        assert got["all_gather"] == want_ag, (impl, mode, got)
+        assert got["all_to_all"] == a2a, (impl, mode, got)
+        print(f"{impl} {mode}: {got} ok")
+
+# --- bitwise equality on a 2-block scan stack (default chunked impl) -------
+ev = cfg.evoformer
+params = randomize(af2.stack_init(jax.random.PRNGKey(0), ev, 2, scan=True),
+                   jax.random.PRNGKey(7))
+msa = jax.random.normal(jax.random.PRNGKey(1), (s, r, ev.c_m))
+z = jax.random.normal(jax.random.PRNGKey(2), (r, r, ev.c_z))
+def run_stack(overlap):
+    bf = dap_lib.make_dap_block_fn(s, overlap=overlap)
+    def fn(p, m, zz):
+        m_l, z_l = dap_lib.shard_inputs(m, zz)
+        m_l, z_l = af2.evoformer_stack(p, ev, 2, m_l, z_l, scan=True,
+                                       remat=False, block_fn=bf)
+        return dap_lib.unshard_outputs(m_l, z_l)
+    return jax.jit(smap(fn, mesh, (P(), P(), P()), (P(), P())))(params, msa, z)
+sm, sz = run_stack(False)
+om, oz = run_stack(True)
+assert np.array_equal(np.asarray(sm), np.asarray(om)), "msa drifted"
+assert np.array_equal(np.asarray(sz), np.asarray(oz)), "pair drifted"
+print("overlap == sync bitwise ok")
+""", devices=2, timeout=560)
+
+
 def test_af2_train_step_plan_matrix_vs_oracle():
     """Satellite of the ParallelPlan refactor: serial-DP / BP / DAP / hybrid
     plans (plus the auto_plan pick) all produce the same losses and updated
@@ -161,6 +237,7 @@ def test_af2_train_step_plan_matrix_vs_oracle():
     pins the extra-MSA OPM denominator fix: n_extra_seq != n_seq here, so a
     block_fn hard-coding cfg.n_seq would diverge under DAP."""
     run_subprocess("""
+import dataclasses, os
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.config import af2_tiny
 from repro.core import model as af2
@@ -202,7 +279,17 @@ plans = {
     # 'chunked', so the 'dap' plan above covers that impl; this one pins the
     # fused kernel against the same single-device chunked oracle)
     "dap_tri_pallas": ParallelPlan(data=4, dap=2, tri_mult_impl="pallas"),
+    # communication-overlapped DAP: the double-buffered prefetch schedule is
+    # bit-compatible with the sync schedule, so it must hit the same oracle
+    "dap_overlap": ParallelPlan(data=4, dap=2, overlap_dap=True),
 }
+if os.environ.get("REPRO_FORCE_OVERLAP_DAP") == "1":
+    # tier-1f: force the overlapped schedule onto every eligible plan so the
+    # whole matrix re-runs through the prefetch carry
+    plans = {n: (dataclasses.replace(p, overlap_dap=True)
+                 if p.dap > 1 and p.branch == 1 else p)
+             for n, p in plans.items()}
+    print("forced overlap_dap on eligible plans")
 assert (auto.branch, auto.dap) == (2, 1)  # covers the BP row of the matrix
 for name, plan in plans.items():
     l, s = run(plan)
@@ -213,7 +300,7 @@ for name, plan in plans.items():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-2, atol=2e-3, err_msg=name)
     print(f"plan {name} == oracle ok ({plan.describe()})")
-""", timeout=1100)
+""", timeout=1400)
 
 
 def test_grad_compression_error_feedback():

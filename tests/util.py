@@ -59,6 +59,31 @@ def iter_eqn_avals(closed_jaxpr):
     yield from walk(closed_jaxpr.jaxpr)
 
 
+def count_prims(closed_jaxpr, names):
+    """Occurrences of each primitive name, recursing into sub-jaxprs
+    (scan/cond/shard_map bodies) — used to pin collective counts."""
+    from collections import Counter
+
+    from jax import core
+
+    counts = Counter({n: 0 for n in names})
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name in names:
+                counts[eqn.primitive.name] += 1
+            for val in eqn.params.values():
+                items = val if isinstance(val, (tuple, list)) else (val,)
+                for it in items:
+                    if isinstance(it, core.ClosedJaxpr):
+                        walk(it.jaxpr)
+                    elif isinstance(it, core.Jaxpr):
+                        walk(it)
+
+    walk(closed_jaxpr.jaxpr)
+    return dict(counts)
+
+
 def max_eqn_elems(closed_jaxpr) -> int:
     """Largest eqn-output aval, in elements."""
     import numpy as np
