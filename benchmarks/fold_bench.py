@@ -91,16 +91,110 @@ def fold_adaptive_recycle():
 
 def fold_long_dap_derived():
     """Analytical long-protein route: per-block roofline time vs dap extent
-    at fine-tune shapes — the trade the engine's plan table encodes."""
+    at fine-tune shapes — the trade the engine's plan table encodes.
+
+    ``derived: True`` marks the row as model-derived: it carries NO
+    measured throughput fields (a future serve-row regression gate must
+    never read a placeholder 0.0 as a real measurement — that was a live
+    bug: this row used to commit ``mean_step_ms: 0.0`` / ``folds_per_s:
+    0.0``).
+    """
     from repro.analysis.roofline import estimate_block_time
     from repro.core.config import af2_finetune
     cfg = af2_finetune()
-    row = {"shape": f"r{cfg.n_res}_s{cfg.n_seq}", "compiles": 0,
-           "mean_step_ms": 0.0, "folds_per_s": 0.0}
+    row = {"shape": f"r{cfg.n_res}_s{cfg.n_seq}", "derived": True,
+           "compiles": 0}
     for dap in (1, 2, 4, 8):
         t = estimate_block_time(cfg, bp=1, dap=dap)
         row[f"block_ms_dap{dap}"] = round(t * 1e3, 3)
     emit_serve("fold_long_dap_derived", row)
 
 
-ALL = [fold_mixed_queue, fold_adaptive_recycle, fold_long_dap_derived]
+def fold_sustained_traffic():
+    """Offered-load scenario (ISSUE 7 tentpole): Poisson arrivals at two
+    load factors, identical traffic served by the continuous-batching
+    scheduler AND the FIFO-drain baseline on a deterministic virtual clock.
+
+    Per-bucket step costs are CALIBRATED once from warm wall-clock medians
+    and then INJECTED, so every latency percentile is a pure function of
+    (traffic seed, policy): reproducible green-gating with real jitted
+    steps underneath.  The scenario RAISES — failing the whole green gate —
+    if continuous does not beat FIFO on p99 at the higher load, or if
+    compiles exceed the bucket table.
+    """
+    import dataclasses
+
+    import numpy as np
+
+    from repro.serve.result_cache import ResultCache
+    from repro.serve.scheduler import VirtualClock, calibrate_step_costs
+
+    # tol=0: every fold runs EXACTLY max_recycle cycles, so the capacity
+    # estimate below is exact AND a fold spans multiple schedulable steps —
+    # the regime continuous batching targets (a 1-cycle fold has no "next
+    # step" to admit into, and both policies degenerate to the same plan)
+    cfg, eng = _tiny_engine(tol=0.0, max_recycle=3)
+    base = _mixed_requests(cfg, 12)
+    costs = calibrate_step_costs(eng, base[:4])
+    slots = {b: eng.slots_for(b) for b in costs}
+
+    # offered capacity: requests/s the engine sustains with full slots
+    per_req = float(np.mean([eng.max_recycle * costs[b] / slots[b]
+                             for b in costs]))
+    capacity_rps = 1.0 / per_req
+
+    def traffic(rate, seed):
+        rng = np.random.default_rng(seed)
+        t, reqs = 0.0, []
+        slack = 6 * eng.max_recycle * max(costs.values())
+        for i, r in enumerate(base):
+            # every 3rd request repeats the previous sequence — the
+            # consumer-scale duplicate pattern the result cache targets
+            feats = reqs[-1].features if i % 3 == 2 else r.features
+            t += float(rng.exponential(1.0 / rate))
+            reqs.append(dataclasses.replace(
+                r, rid=i, features=feats, arrival_s=t,
+                deadline_s=t + slack))
+        return reqs
+
+    for label, rho in (("rate_lo", 0.5), ("rate_hi", 1.25)):
+        rate = rho * capacity_rps
+        reports = {}
+        for policy in ("continuous", "fifo"):
+            eng.serve(traffic(rate, seed=7), policy=policy,
+                      clock=VirtualClock(), step_cost=costs,
+                      cache=ResultCache(32))
+            reports[policy] = eng.last_report
+        c, f = reports["continuous"], reports["fifo"]
+        if label == "rate_hi" and not c["p99_ms"] < f["p99_ms"]:
+            raise AssertionError(
+                f"continuous batching must beat FIFO on p99 at high load: "
+                f"{c['p99_ms']:.1f}ms vs {f['p99_ms']:.1f}ms")
+        if eng.compile_misses > 2 * len(eng.buckets):
+            raise AssertionError(
+                f"compiles ({eng.compile_misses}) exceeded the bucket "
+                f"table bound ({2 * len(eng.buckets)})")
+        emit_serve(f"fold_sustained_{label}", {
+            "offered_rps": round(rate, 3),
+            "load_factor": rho,
+            "requests": c["requests"],
+            "p50_ms_continuous": round(c["p50_ms"], 1),
+            "p99_ms_continuous": round(c["p99_ms"], 1),
+            "p50_ms_fifo": round(f["p50_ms"], 1),
+            "p99_ms_fifo": round(f["p99_ms"], 1),
+            "goodput_rps_continuous": round(c["goodput_rps"], 3),
+            "goodput_rps_fifo": round(f["goodput_rps"], 3),
+            "on_time_frac_continuous": round(c["on_time_frac"], 3),
+            "on_time_frac_fifo": round(f["on_time_frac"], 3),
+            "cache_hit_rate": round(c["hit_rate"], 3),
+            "stage_featurize_ms": round(c["stage_ms"]["featurize"], 3),
+            "stage_queue_ms": round(c["stage_ms"]["queue"], 1),
+            "stage_service_ms": round(c["stage_ms"]["service"], 1),
+            "utilization_continuous": round(c["utilization"], 3),
+            "utilization_fifo": round(f["utilization"], 3),
+            "compiles": eng.compile_misses,
+        })
+
+
+ALL = [fold_mixed_queue, fold_adaptive_recycle, fold_long_dap_derived,
+       fold_sustained_traffic]

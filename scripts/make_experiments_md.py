@@ -190,7 +190,20 @@ bucket through `core.model.predict`'s adaptive early-exit recycling
 (converged samples freeze inside the batch), and routes long buckets
 through dap-sharded inference plans (`ParallelPlan.for_inference`).
 CPU-scale numbers are structural; `fold_long_dap_derived` carries the
-roofline block-time trade the plan table encodes at fine-tune shapes.
+roofline block-time trade the plan table encodes at fine-tune shapes
+(derived row: roofline-priced, nothing measured — no throughput fields).
+
+The `fold_sustained_*` rows are the sustained-traffic scenario
+(DESIGN.md §12): Poisson arrivals at 0.5x and 1.25x the calibrated
+engine capacity, ~1/3 duplicate sequences, served by BOTH the
+continuous-batching scheduler and the FIFO-drain baseline on a
+deterministic virtual clock (calibrated per-bucket step costs injected,
+real jitted steps underneath).  Each row reports p50/p99 per policy,
+goodput (on-time completions/s), on-time fraction, result-cache hit
+rate, per-stage featurize/queue/service means, and device utilization.
+The row only exists if the tentpole gate held — continuous strictly
+beats FIFO p99 at the overloaded rate and compiles stay bounded by the
+bucket table; the benchmark raises (failing the green gate) otherwise.
 """
 
 

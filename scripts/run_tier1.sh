@@ -55,3 +55,13 @@ echo "== tier-1f: overlapped-DAP forced (REPRO_FORCE_OVERLAP_DAP=1) =="
 REPRO_FORCE_OVERLAP_DAP=1 python -m pytest -x -q \
   tests/test_parallel_equiv.py::test_af2_train_step_plan_matrix_vs_oracle \
   tests/test_parallel_equiv.py::test_dap_overlap_collective_counts_and_bitwise_equality
+
+# tier-1g: the load-scheduling tier (marker: serve_load) — continuous-batching
+# admission invariants, deadline/priority ordering, starvation bound, result
+# cache bit-identity, compile bound under sustained admission.  Every latency
+# runs on a FAKE (virtual) clock with injected per-bucket step costs, so this
+# tier is deterministic: no wall-time flakiness by construction.  Also in the
+# main pass; standalone for scheduler-only changes:
+# ./scripts/run_tier1.sh -m serve_load
+echo "== tier-1g: load-scheduling tier (continuous batching, fake clock) =="
+python -m pytest -x -q -m serve_load

@@ -65,3 +65,96 @@ def parse_hlo_collectives(hlo_text: str) -> dict:
 
 def collective_bytes(hlo_text: str) -> int:
     return sum(v["bytes"] for v in parse_hlo_collectives(hlo_text).values())
+
+
+# ---------------------------------------------------------------------------
+# Async-collective overlap check (ROADMAP item 2 / PR 6's compiler half)
+# ---------------------------------------------------------------------------
+
+# instruction line: `%name = <shape> opcode(...)`; name may carry dots
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s*([\w\-]+)\(")
+
+# ops that neither compute nor move meaningful data — a start/done pair
+# separated only by these is NOT overlapped, the latency is fully exposed
+_PASSTHROUGH_OPS = frozenset({
+    "get-tuple-element", "tuple", "bitcast", "bitcast-convert", "parameter",
+    "constant", "copy", "copy-start", "copy-done", "after-all", "reshape",
+    "transpose", "broadcast", "partition-id", "replica-id",
+})
+
+
+def _is_compute(opcode: str) -> bool:
+    if opcode in _PASSTHROUGH_OPS:
+        return False
+    if opcode.endswith("-start") or opcode.endswith("-done"):
+        return False   # another async pair is not THIS pair's overlap work
+    return True
+
+
+def async_collective_gaps(hlo_text: str, kinds=("all-gather",)) -> list:
+    """For every async ``<kind>-start`` / ``<kind>-done`` pair: the ops
+    issued between them.
+
+    HLO prints each computation contiguously and a done consumes its start
+    by name within the same computation, so the textual span between the
+    pair IS the instruction window the scheduler placed inside the
+    collective's latency.  Returns one dict per pair:
+    ``{"name", "kind", "gap_ops", "compute_ops", "compute_opcodes"}`` —
+    ``compute_ops`` counts non-passthrough, non-async ops (fusions, dots,
+    element-wise work...), the overlap evidence.
+    """
+    starts: dict = {}          # %name -> {pair fields, "ops": [...]}
+    open_pairs: list = []      # insertion-ordered open windows
+    out = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, opcode = m.group(1), m.group(3)
+        if any(opcode == f"{k}-start" for k in kinds):
+            rec = {"name": name, "kind": opcode[:-len("-start")], "ops": []}
+            starts[name] = rec
+            open_pairs.append(rec)
+            continue
+        done_kind = next((k for k in kinds if opcode == f"{k}-done"), None)
+        if done_kind is not None:
+            # the done's operand names its start: `...-done(%<start-name>)`
+            operand = re.search(r"\(%?([\w.\-]+)", line)
+            rec = starts.pop(operand.group(1), None) if operand else None
+            if rec is not None:
+                open_pairs.remove(rec)
+                gap = rec.pop("ops")
+                rec["gap_ops"] = len(gap)
+                rec["compute_opcodes"] = [o for o in gap if _is_compute(o)]
+                rec["compute_ops"] = len(rec["compute_opcodes"])
+                out.append(rec)
+            continue
+        for rec in open_pairs:
+            rec["ops"].append(opcode)
+    return out
+
+
+def check_async_overlap(hlo_text: str, *, kinds=("all-gather",),
+                        min_compute: int = 1):
+    """Did the compiler actually hide the collectives?  ``(ok, report)``.
+
+    ``ok`` is None when the lowering contains NO async pairs of the given
+    kinds — the pass pipeline didn't split collectives into start/done
+    (CPU backends usually don't), so there is nothing to check and callers
+    should skip cleanly.  Otherwise ok is True iff EVERY pair has at least
+    ``min_compute`` real compute ops inside its window.
+    """
+    pairs = async_collective_gaps(hlo_text, kinds=kinds)
+    if not pairs:
+        return None, {"pairs": 0, "detail": []}
+    bad = [p for p in pairs if p["compute_ops"] < min_compute]
+    report = {
+        "pairs": len(pairs),
+        "overlapped": len(pairs) - len(bad),
+        "exposed": [p["name"] for p in bad],
+        "detail": [{k: p[k] for k in
+                    ("name", "kind", "gap_ops", "compute_ops")}
+                   for p in pairs],
+    }
+    return not bad, report

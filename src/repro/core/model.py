@@ -311,6 +311,84 @@ def forward(params, cfg: AlphaFold2Config, batch, *, n_recycle=1,
     return out
 
 
+def fold_pair_mask(batch):
+    """(pair_mask (B, r, r), pair_count (B,)) for the convergence test —
+    padded residues never vote on whether a sample converged."""
+    bsz, r = batch["target_feat"].shape[:2]
+    res_mask = batch.get("res_mask")
+    if res_mask is not None:
+        pair_mask = (res_mask[:, :, None] * res_mask[:, None, :]
+                     ).astype(jnp.float32)
+    else:
+        pair_mask = jnp.ones((bsz, r, r), jnp.float32)
+    return pair_mask, jnp.maximum(jnp.sum(pair_mask, (1, 2)), 1.0)
+
+
+def fold_carry_init(cfg: AlphaFold2Config, bsz: int, r: int, dtype):
+    """Zero recycling carry: (prev (msa0, z, x), s_final)."""
+    prev = (jnp.zeros((bsz, r, cfg.c_m), dtype),
+            jnp.zeros((bsz, r, r, cfg.c_z), dtype),
+            jnp.zeros((bsz, r, 3), jnp.float32))
+    return prev, jnp.zeros((bsz, r, cfg.structure.c_s), dtype)
+
+
+def fold_cycle(params, cfg: AlphaFold2Config, batch, prev, sf, conv, n_rec, *,
+               tol: float, pair_mask, pair_count, block_fn=None,
+               stack_io=None, dtype=jnp.bfloat16, active=None):
+    """ONE batched recycling cycle with per-sample freeze semantics.
+
+    THE cycle definition — shared by :func:`predict`'s while_loop body and
+    the continuous-batching serving step (``serve.fold_steps.
+    make_recycle_step``), so stepwise serving and whole-fold inference can
+    never drift apart.  ``params`` must already be cast to the compute
+    dtype.  ``active`` (B,) bool marks occupied batch slots in the serving
+    path: an inactive slot behaves exactly like a frozen (converged) one —
+    its carry never updates, its recycle counter never advances, and it can
+    never converge — which is what makes mid-flight admission safe (the
+    scheduler's invariant: admitting into a free slot cannot change any
+    in-flight sample's state or budget, because per-slot math is
+    independent under vmap).  ``active=None`` is the predict() fast path
+    (every slot live).
+    """
+    def one_cycle(sample, prev_s):
+        msa, z, single = run_trunk(params, cfg, sample, prev_s,
+                                   block_fn=block_fn, stack_io=stack_io,
+                                   rng=None, deterministic=True, dtype=dtype,
+                                   masks=trunk_masks(sample))
+        (_, trans), _, s_final = struct.structure_module(
+            params["structure"], cfg.structure, single, z,
+            sample.get("res_mask"))
+        return (msa[0], z, trans), s_final
+
+    new_prev, new_sf = jax.vmap(one_cycle)(batch, prev)
+    old_bins = jax.vmap(recycle_distance_bins)(prev[2])
+    new_bins = jax.vmap(recycle_distance_bins)(new_prev[2])
+    frac = jnp.sum((old_bins != new_bins) * pair_mask, (1, 2)) / pair_count
+    keep = conv if active is None else (conv | ~active)
+
+    def sel(old, new):
+        return jnp.where(keep.reshape(-1, *([1] * (new.ndim - 1))), old, new)
+    prev = jax.tree_util.tree_map(sel, prev, new_prev)
+    sf = sel(sf, new_sf)
+    n_rec = n_rec + jnp.where(keep, 0, 1)
+    conv = conv | ((frac < tol) & ~keep)
+    return prev, sf, conv, n_rec
+
+
+def fold_heads(params, cfg: AlphaFold2Config, z, s_final) -> dict:
+    """Confidence heads over a batched carry (params already cast)."""
+    plddt_logits = jax.vmap(
+        lambda s: heads_lib.plddt_logits(params["heads"], s))(s_final)
+    disto_logits = jax.vmap(
+        lambda zz: heads_lib.distogram_logits(params["heads"], zz))(z)
+    return {
+        "plddt": heads_lib.plddt_from_logits(plddt_logits),
+        "contact_probs": heads_lib.contact_probs_from_distogram(disto_logits),
+        "plddt_logits": plddt_logits,
+        "distogram_logits": disto_logits,
+    }
+
+
 def predict(params, cfg: AlphaFold2Config, batch, *, max_recycle: int,
             tol: float = 0.0, block_fn=None, stack_io=None,
             dtype=jnp.bfloat16) -> dict:
@@ -341,29 +419,8 @@ def predict(params, cfg: AlphaFold2Config, batch, *, max_recycle: int,
         raise ValueError(f"max_recycle must be >= 1, got {max_recycle}")
     params = nn.Policy(compute_dtype=dtype).cast(params)
     bsz, r = batch["target_feat"].shape[:2]
-    c_m, c_z, c_s = cfg.c_m, cfg.c_z, cfg.structure.c_s
-    res_mask = batch.get("res_mask")
-
-    def one_cycle(sample, prev):
-        msa, z, single = run_trunk(params, cfg, sample, prev,
-                                   block_fn=block_fn, stack_io=stack_io,
-                                   rng=None, deterministic=True, dtype=dtype,
-                                   masks=trunk_masks(sample))
-        (_, trans), _, s_final = struct.structure_module(
-            params["structure"], cfg.structure, single, z,
-            sample.get("res_mask"))
-        return (msa[0], z, trans), s_final
-
-    prev0 = (jnp.zeros((bsz, r, c_m), dtype),
-             jnp.zeros((bsz, r, r, c_z), dtype),
-             jnp.zeros((bsz, r, 3), jnp.float32))
-    sf0 = jnp.zeros((bsz, r, c_s), dtype)
-    if res_mask is not None:
-        pair_mask = (res_mask[:, :, None] * res_mask[:, None, :]
-                     ).astype(jnp.float32)
-    else:
-        pair_mask = jnp.ones((bsz, r, r), jnp.float32)
-    pair_count = jnp.maximum(jnp.sum(pair_mask, (1, 2)), 1.0)
+    prev0, sf0 = fold_carry_init(cfg, bsz, r, dtype)
+    pair_mask, pair_count = fold_pair_mask(batch)
 
     def cond(state):
         i, _, _, conv, _ = state
@@ -371,39 +428,19 @@ def predict(params, cfg: AlphaFold2Config, batch, *, max_recycle: int,
 
     def body(state):
         i, prev, sf, conv, n_rec = state
-        new_prev, new_sf = jax.vmap(one_cycle)(batch, prev)
-        old_bins = jax.vmap(recycle_distance_bins)(prev[2])
-        new_bins = jax.vmap(recycle_distance_bins)(new_prev[2])
-        frac = jnp.sum((old_bins != new_bins) * pair_mask, (1, 2)) / pair_count
-        keep = conv  # frozen samples discard the cycle they just (re)ran
-
-        def sel(old, new):
-            return jnp.where(keep.reshape(-1, *([1] * (new.ndim - 1))),
-                             old, new)
-        prev = jax.tree_util.tree_map(sel, prev, new_prev)
-        sf = sel(sf, new_sf)
-        n_rec = n_rec + jnp.where(keep, 0, 1)
-        conv = conv | ((frac < tol) & ~keep)
+        prev, sf, conv, n_rec = fold_cycle(
+            params, cfg, batch, prev, sf, conv, n_rec, tol=tol,
+            pair_mask=pair_mask, pair_count=pair_count, block_fn=block_fn,
+            stack_io=stack_io, dtype=dtype)
         return i + 1, prev, sf, conv, n_rec
 
     state0 = (jnp.zeros((), jnp.int32), prev0, sf0,
               jnp.zeros((bsz,), bool), jnp.zeros((bsz,), jnp.int32))
     _, prev, s_final, conv, n_rec = jax.lax.while_loop(cond, body, state0)
-    msa0, z, coords = prev
-
-    plddt_logits = jax.vmap(
-        lambda s: heads_lib.plddt_logits(params["heads"], s))(s_final)
-    disto_logits = jax.vmap(
-        lambda zz: heads_lib.distogram_logits(params["heads"], zz))(z)
-    return {
-        "coords": coords,
-        "plddt": heads_lib.plddt_from_logits(plddt_logits),
-        "contact_probs": heads_lib.contact_probs_from_distogram(disto_logits),
-        "plddt_logits": plddt_logits,
-        "distogram_logits": disto_logits,
-        "n_recycles": n_rec,
-        "converged": conv,
-    }
+    _, z, coords = prev
+    out = fold_heads(params, cfg, z, s_final)
+    out.update(coords=coords, n_recycles=n_rec, converged=conv)
+    return out
 
 
 def loss_fn(params, cfg: AlphaFold2Config, batch, *, n_recycle=1,

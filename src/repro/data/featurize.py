@@ -1,0 +1,188 @@
+"""Host-side featurize stage: the ParaFold two-stage split (DESIGN.md §12).
+
+ParaFold (arXiv:2111.06340) and ScaleFold (arXiv:2404.11068) both find that
+end-to-end AlphaFold time is dominated by CPU-side feature preparation and
+scheduling, not model FLOPs.  This module is the CPU half of that split for
+the serving path: it turns raw ``FoldRequest`` features into bucket-padded,
+digest-stamped ``Featurized`` items on a thread pool, so the accelerator
+stage (``serve.scheduler``) never blocks on input prep.
+
+Two pieces:
+
+* ``feature_digest`` — a canonical sha256 over the request's feature arrays
+  (sorted keys, shape/dtype-tagged bytes).  The serving result cache
+  (``serve.result_cache``) keys on it: identical sequences are common at
+  consumer scale, and two requests with equal digests fold to bit-identical
+  results, so the digest IS the cache identity.
+* ``FeaturizePipeline`` — inline (workers=0, deterministic: tests and the
+  virtual-clock benchmark) or thread-pooled (workers>0) featurization with
+  a LENGTH-BUCKET-AWARE prefetch depth: small buckets get deeper prefetch
+  (their step time is short, so the model stage drains them faster), large
+  buckets shallower (each item pins more host memory and the step gives the
+  pool more slack).  Depth scales inversely with bucket residue count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import queue
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serve import fold_steps as fs
+
+
+def feature_digest(features: dict) -> str:
+    """Canonical content hash of a request's (unpadded) feature arrays.
+
+    Sorted keys; every array contributes its key, shape, dtype, and raw
+    bytes — so the digest is invariant to dict ordering and host layout but
+    sensitive to any value/shape/dtype change.
+    """
+    h = hashlib.sha256()
+    for k in sorted(features):
+        a = np.ascontiguousarray(np.asarray(features[k]))
+        h.update(k.encode())
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class Featurized:
+    """One request after the featurize stage, plus its stage timestamps.
+
+    The mutable ``*_s`` fields are the per-request stage ledger the
+    scheduler fills in (JetStream-style breakdown): ``featurize_s`` is the
+    host wall time of padding+digesting (overlapped with the model stage
+    when workers>0, so it is accounted, not added, to latency);
+    ``ready_s`` / ``admit_s`` / ``finish_s`` are VIRTUAL-clock instants.
+    """
+    request: object               # FoldRequest
+    bucket: fs.Bucket
+    padded: dict                  # bucket-padded features + validity masks
+    digest: str
+    featurize_s: float            # host wall seconds spent featurizing
+    ready_s: float = 0.0          # virtual time the item left this stage
+    admit_s: float = 0.0          # virtual time it entered a batch slot
+    finish_s: float = 0.0         # virtual time its fold completed
+
+
+class FeaturizePipeline:
+    """Decoupled featurize stage feeding the admission scheduler.
+
+    ``workers=0`` featurizes inline in ``submit`` (fully deterministic —
+    the mode every test and the green-gated benchmark use).  ``workers>0``
+    runs a thread pool with a per-bucket in-flight cap from
+    :meth:`depth_for`; ``poll`` drains whatever finished.
+    """
+
+    def __init__(self, buckets, *, workers: int = 0, depth_base: int = 4,
+                 depth_min: int = 2, depth_max: int = 16):
+        self.buckets = sorted(buckets)
+        self.workers = workers
+        self.depth_base = depth_base
+        self.depth_min = depth_min
+        self.depth_max = depth_max
+        self.stats = {"featurized": 0, "featurize_s": 0.0, "max_inflight": 0}
+        self._ready: "queue.Queue[Featurized]" = queue.Queue()
+        self._backlog = deque()           # requests not yet handed to a worker
+        self._inflight = 0
+        self._lock = threading.Lock()
+        self._pool = None
+        if workers > 0:
+            from concurrent.futures import ThreadPoolExecutor
+            self._pool = ThreadPoolExecutor(
+                max_workers=workers, thread_name_prefix="featurize")
+
+    # -- depth policy --------------------------------------------------------
+
+    def depth_for(self, bucket: fs.Bucket) -> int:
+        """Prefetch depth for one bucket: inversely proportional to its
+        residue pad (clamped), normalized so the LARGEST bucket gets
+        ``depth_base``."""
+        largest = self.buckets[-1].n_res
+        d = round(self.depth_base * largest / max(bucket.n_res, 1))
+        return max(self.depth_min, min(self.depth_max, d))
+
+    # -- stage ---------------------------------------------------------------
+
+    def _featurize(self, request) -> Featurized:
+        t0 = time.perf_counter()
+        bucket = fs.bucket_for(self.buckets, request.features)
+        padded = fs.pad_to_bucket(request.features, bucket)
+        digest = feature_digest(request.features)
+        dt = time.perf_counter() - t0
+        with self._lock:
+            self.stats["featurized"] += 1
+            self.stats["featurize_s"] += dt
+        return Featurized(request=request, bucket=bucket, padded=padded,
+                          digest=digest, featurize_s=dt)
+
+    def _worker(self, request):
+        try:
+            self._ready.put(self._featurize(request))
+        finally:
+            with self._lock:
+                self._inflight -= 1
+            self._pump()
+
+    def _pump(self):
+        """Hand backlog items to the pool up to the bucket-aware depth.
+
+        The cap is the depth of the SMALLEST bucket with backlog — a cheap
+        global bound that still lets short-protein bursts prefetch deeper
+        than long-protein ones.
+        """
+        while True:
+            with self._lock:
+                if not self._backlog:
+                    return
+                head = self._backlog[0]
+                cap = self.depth_for(
+                    fs.bucket_for(self.buckets, head.features))
+                if self._inflight >= cap:
+                    return
+                self._backlog.popleft()
+                self._inflight += 1
+                self.stats["max_inflight"] = max(
+                    self.stats["max_inflight"], self._inflight)
+            self._pool.submit(self._worker, head)
+
+    def submit(self, request) -> None:
+        if self._pool is None:
+            self._ready.put(self._featurize(request))
+            return
+        with self._lock:
+            self._backlog.append(request)
+        self._pump()
+
+    def poll(self, block: bool = False,
+             timeout: Optional[float] = None) -> list:
+        """Drain finished items.  ``block=True`` waits for at least one
+        (returns [] only on timeout or an empty, idle pipeline)."""
+        out = []
+        if block and self._ready.empty() and self.pending:
+            try:
+                out.append(self._ready.get(timeout=timeout or 30.0))
+            except queue.Empty:
+                return out
+        while True:
+            try:
+                out.append(self._ready.get_nowait())
+            except queue.Empty:
+                return out
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._inflight + len(self._backlog)
+
+    def close(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)

@@ -43,6 +43,28 @@ def main():
                     help="early-exit recycling tolerance (fraction of "
                          "changed CA-distance bins; 0 = fixed recycling)")
     ap.add_argument("--seed", type=int, default=0)
+    # sustained-traffic knobs (DESIGN.md §12): --arrival-rate > 0 switches
+    # run() (drain a pre-built queue) to serve() (admission scheduling over
+    # Poisson arrivals on a virtual clock)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="offered load in requests/s of VIRTUAL time; > 0 "
+                         "enables the continuous-batching serve() path")
+    ap.add_argument("--policy", choices=["continuous", "fifo"],
+                    default="continuous",
+                    help="admission policy (fifo = PR 4 drain baseline)")
+    ap.add_argument("--cache-capacity", type=int, default=64,
+                    help="sequence-hash result cache entries (0 disables)")
+    ap.add_argument("--deadline-slack", type=float, default=0.0,
+                    help="per-request deadline = arrival + slack seconds "
+                         "of virtual time (0 = no deadlines)")
+    ap.add_argument("--duplicates", type=float, default=0.3,
+                    help="fraction of requests repeating an earlier "
+                         "sequence (exercises the result cache)")
+    ap.add_argument("--featurize-workers", type=int, default=0,
+                    help="featurize-stage threads (0 = inline)")
+    ap.add_argument("--starvation-steps", type=int, default=16,
+                    help="steps a lane may be passed over before it is "
+                         "force-scheduled")
     args = ap.parse_args()
 
     if not args.arch and not args.fold:
@@ -155,6 +177,9 @@ def run_fold(args):
         print(f"  long plan  {engine.long_plan.describe()} "
               f"(>= {engine.long_threshold} res)")
     reqs = make_fold_requests(cfg, args.requests, args.seed)
+    if args.arrival_rate > 0:
+        run_fold_traffic(args, engine, reqs)
+        return
     t0 = time.time()
     done = engine.run(reqs)
     dt = time.time() - t0
@@ -169,6 +194,47 @@ def run_fold(args):
         print(f"  req {rid}: len={r.coords.shape[0]} bucket<= "
               f"{r.bucket.n_res} plddt={r.plddt.mean():.1f} "
               f"recycles={r.n_recycles} converged={r.converged}")
+
+
+def run_fold_traffic(args, engine, reqs):
+    """Sustained-traffic serving: Poisson arrivals on the virtual clock,
+    admission-scheduled (continuous batching) with the result cache and the
+    decoupled featurize stage.  Step costs here are MEASURED wall time (the
+    benchmark injects calibrated costs instead for determinism)."""
+    import dataclasses as dc
+    import numpy as np
+    from repro.serve.result_cache import ResultCache
+    from repro.serve.scheduler import VirtualClock
+
+    rng = np.random.default_rng(args.seed)
+    t, traffic = 0.0, []
+    for i, r in enumerate(reqs):
+        feats = (traffic[rng.integers(0, len(traffic))].features
+                 if traffic and rng.random() < args.duplicates
+                 else r.features)
+        t += float(rng.exponential(1.0 / args.arrival_rate))
+        traffic.append(dc.replace(
+            r, features=feats, arrival_s=t,
+            deadline_s=(t + args.deadline_slack
+                        if args.deadline_slack > 0 else None)))
+    cache = ResultCache(args.cache_capacity) if args.cache_capacity else None
+    done = engine.serve(traffic, policy=args.policy, clock=VirtualClock(),
+                        cache=cache,
+                        featurize_workers=args.featurize_workers,
+                        starvation_steps=args.starvation_steps)
+    rep = engine.last_report
+    print(f"served {len(done)}/{rep['requests']} folds under "
+          f"{args.arrival_rate:.2f} req/s ({args.policy}): "
+          f"p50 {rep['p50_ms']:.0f}ms p99 {rep['p99_ms']:.0f}ms, "
+          f"goodput {rep['goodput_rps']:.2f} req/s, "
+          f"on-time {rep['on_time_frac']:.0%}")
+    sm = rep["stage_ms"]
+    print(f"  stages: featurize {sm['featurize']:.2f}ms | queue "
+          f"{sm['queue']:.0f}ms | service {sm['service']:.0f}ms; "
+          f"utilization {rep['utilization']:.0%}, "
+          f"{rep['steps']} steps, {engine.compile_misses} compiles, "
+          f"cache hit rate {rep['hit_rate']:.0%}, "
+          f"{rep['forced_admissions']} forced admissions")
 
 
 if __name__ == "__main__":

@@ -3,3 +3,6 @@ from repro.serve.steps import (  # noqa: F401
 from repro.serve.engine import DecodeEngine  # noqa: F401
 from repro.serve.fold_engine import FoldEngine, FoldRequest, FoldResult  # noqa: F401
 from repro.serve.fold_steps import Bucket, default_buckets  # noqa: F401
+from repro.serve.result_cache import ResultCache  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    ContinuousScheduler, VirtualClock, calibrate_step_costs)

@@ -39,6 +39,10 @@ class FoldRequest:
     rid: int
     features: dict          # unpadded: msa_feat (s,r,f), extra_msa_feat,
     #                         target_feat (r,f), residue_index (r,)
+    # -- sustained-traffic fields (serve(); run() ignores them) -------------
+    arrival_s: float = 0.0              # virtual-clock arrival instant
+    deadline_s: Optional[float] = None  # absolute virtual deadline (or None)
+    priority: int = 0                   # higher serves first
 
 
 @dataclasses.dataclass
@@ -50,9 +54,15 @@ class FoldResult:
     n_recycles: int         # trunk cycles this sample actually consumed
     converged: bool         # early-exited before max_recycle
     bucket: fs.Bucket
-    latency_s: float        # wall time of the batched step that served this
-    #                         request (every rider waits the full step; queue
-    #                         wait is not included)
+    latency_s: float        # run(): wall time of the batched step that
+    #                         served this request; serve(): VIRTUAL
+    #                         arrival -> finish latency (queue included)
+    # -- per-stage ledger, serve() only (virtual seconds except featurize) --
+    featurize_s: float = 0.0    # host wall time in the featurize stage
+    queue_s: float = 0.0        # featurized -> admitted into a slot
+    service_s: float = 0.0      # admitted -> harvested
+    finish_s: float = 0.0       # virtual completion instant
+    cache_hit: bool = False     # answered from the result cache
 
 
 class FoldEngine:
@@ -87,11 +97,16 @@ class FoldEngine:
         self.tol = tol
         self.dtype = dtype
         self.devices = devices
-        self._steps: Dict[tuple, object] = {}   # (bucket, plan) -> jitted fn
+        # (kind, bucket, plan) -> jitted fn; kind "fold" = whole-fold
+        # predict (run()), kind "recycle" = stepwise cycle (serve()) — both
+        # kinds count toward compile_misses, so the bound is 2x the bucket
+        # table when both entry points are exercised, still never traffic
+        self._steps: Dict[tuple, object] = {}
         self._built: Dict[object, object] = {}  # plan -> BuiltPlan
         self.compile_misses = 0                 # jit-cache-miss counter
         self.stats = {"requests": 0, "steps": 0, "recycles_run": 0,
                       "recycles_budget": 0, "per_bucket": {}}
+        self.last_report: dict = {}             # serve()'s stage/latency report
 
     # -- plan / step cache ---------------------------------------------------
 
@@ -104,20 +119,40 @@ class FoldEngine:
             self._built[plan] = plan.build(self.devices, cfg=bcfg)
         return self._built[plan]
 
-    def step_for(self, bucket: fs.Bucket):
-        """The jitted fold step for this bucket — compiled once per
-        (bucket, plan) cell, counted by ``compile_misses``."""
+    def bucket_model_cfg(self, bucket: fs.Bucket):
+        """Bucket-shaped, plan-normalized model config for one cell."""
         plan = self.plan_for(bucket)
-        key = (bucket, plan)
+        return plan.apply_to(fs.bucket_cfg(self.cfg, bucket))
+
+    def _step_cell(self, kind: str, bucket: fs.Bucket, make):
+        plan = self.plan_for(bucket)
+        key = (kind, bucket, plan)
         if key not in self._steps:
             self.compile_misses += 1
             bcfg = plan.apply_to(fs.bucket_cfg(self.cfg, bucket))
             plan.validate(bcfg)     # actionable: dap vs bucket divisibility
             built = self._built_for(plan, bcfg)
-            self._steps[key] = fs.make_fold_step(
-                bcfg, built, max_recycle=self.max_recycle, tol=self.tol,
-                dtype=self.dtype)
+            self._steps[key] = make(bcfg, built)
         return self._steps[key]
+
+    def step_for(self, bucket: fs.Bucket):
+        """The jitted WHOLE-FOLD step (predict's while_loop) for this bucket
+        — compiled once per (bucket, plan) cell, counted by
+        ``compile_misses``."""
+        return self._step_cell(
+            "fold", bucket,
+            lambda bcfg, built: fs.make_fold_step(
+                bcfg, built, max_recycle=self.max_recycle, tol=self.tol,
+                dtype=self.dtype))
+
+    def recycle_step_for(self, bucket: fs.Bucket):
+        """The jitted SINGLE-CYCLE step the continuous-batching scheduler
+        drives — same compile discipline, its own cache cell per
+        (bucket, plan)."""
+        return self._step_cell(
+            "recycle", bucket,
+            lambda bcfg, built: fs.make_recycle_step(
+                bcfg, built, tol=self.tol, dtype=self.dtype))
 
     def _batch_extent(self, bucket: fs.Bucket) -> int:
         """Global micro-batch: a multiple of the plan's data extent so the
@@ -125,6 +160,10 @@ class FoldEngine:
         plan = self.plan_for(bucket)
         data = plan.pod * plan.data
         return (self.micro_batch + data - 1) // data * data
+
+    def slots_for(self, bucket: fs.Bucket) -> int:
+        """Batch slots a scheduler lane owns for this bucket."""
+        return self._batch_extent(bucket)
 
     # -- scheduler -----------------------------------------------------------
 
@@ -190,4 +229,36 @@ class FoldEngine:
                 converged=bool(out["converged"][i]),
                 bucket=bucket,
                 latency_s=dt))
+        return results
+
+    # -- sustained-traffic serving (DESIGN.md §12) ---------------------------
+
+    def serve(self, requests: List[FoldRequest], *,
+              policy: str = "continuous", clock=None, step_cost=None,
+              cache=None, featurize_workers: int = 0,
+              starvation_steps: int = 16) -> Dict[int, FoldResult]:
+        """Serve requests ARRIVING OVER (virtual) TIME; {rid: FoldResult}.
+
+        The continuous-batching entry point: requests carry ``arrival_s`` /
+        ``deadline_s`` / ``priority`` stamps and are admitted into their
+        bucket's next recycling step by a ``ContinuousScheduler``
+        (``policy="fifo"`` reproduces ``run``'s drain semantics as the
+        baseline).  ``cache`` is a ``ResultCache`` (or an int capacity) for
+        sequence-hash short-circuiting; ``step_cost`` injects deterministic
+        per-bucket step costs into the virtual clock (None = measured
+        wall).  The stage/latency report lands in ``self.last_report``.
+        """
+        from repro.serve.result_cache import ResultCache
+        from repro.serve.scheduler import ContinuousScheduler
+        if isinstance(cache, int):
+            cache = ResultCache(cache)
+        sched = ContinuousScheduler(
+            self, policy=policy, clock=clock, step_cost=step_cost,
+            cache=cache, featurize_workers=featurize_workers,
+            starvation_steps=starvation_steps)
+        try:
+            results = sched.serve(requests)
+        finally:
+            sched.featurizer.close()
+        self.last_report = sched.report
         return results

@@ -174,3 +174,112 @@ def make_fold_step(cfg, built, *, max_recycle: int, tol: float,
         return fn(params, batch)
 
     return jax.jit(sharded)
+
+
+# ---------------------------------------------------------------------------
+# Stepwise recycling: the continuous-batching substrate (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+# host-side carry the scheduler owns between recycle steps — one slot per
+# batch lane.  msa0/z/sf round-trip through float32 on the host (float32
+# holds every bfloat16 exactly, so the cast chain is lossless).
+RECYCLE_CARRY_KEYS = ("msa0", "z", "x", "sf", "conv", "n_rec", "active")
+
+
+def init_recycle_carry(cfg, batch: int) -> dict:
+    """Fresh all-slots-free host carry for one bucket lane.
+
+    ``cfg`` must be the bucket-shaped model config (:func:`bucket_cfg`).
+    ``active=False`` slots are inert under :func:`make_recycle_step` — their
+    state never updates — so a zeroed carry plus ``active`` flips is the
+    whole admission protocol.
+    """
+    r = cfg.n_res
+    return {
+        "msa0": np.zeros((batch, r, cfg.c_m), np.float32),
+        "z": np.zeros((batch, r, r, cfg.c_z), np.float32),
+        "x": np.zeros((batch, r, 3), np.float32),
+        "sf": np.zeros((batch, r, cfg.structure.c_s), np.float32),
+        "conv": np.zeros((batch,), bool),
+        "n_rec": np.zeros((batch,), np.int32),
+        "active": np.zeros((batch,), bool),
+    }
+
+
+def clear_carry_slot(carry: dict, j: int) -> None:
+    """Zero one slot in place (admission / harvest bookkeeping)."""
+    for k in ("msa0", "z", "x", "sf"):
+        carry[k][j] = 0
+    carry["conv"][j] = False
+    carry["n_rec"][j] = 0
+    carry["active"][j] = False
+
+
+def make_recycle_step(cfg, built, *, tol: float, dtype=None):
+    """Jitted SINGLE recycling cycle for one (bucket-shaped cfg, plan) cell.
+
+    ``(params, batch, carry) -> (carry', outputs)``: one pass of
+    trunk + structure over every ACTIVE slot, with the same freeze /
+    convergence semantics as :func:`make_fold_step`'s whole-fold predict —
+    both paths call ``core.model.fold_cycle``, so they cannot drift.  The
+    scheduler owns the carry host-side and admits a new request between
+    steps by writing its padded features into a free slot and flipping
+    ``active``; inactive slots are frozen by construction (see
+    ``fold_cycle``), which is what makes mid-flight admission unable to
+    perturb in-flight samples.  Heads run every step (cheap at serving
+    batch sizes) so any slot can be harvested the moment it converges.
+
+    Sharded plans wrap the step in ``shard_map`` exactly like
+    ``make_fold_step`` — batch AND carry sharded over the data axes, params
+    replicated, dap consumed inside the trunk.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import model as af2
+    from repro.nn import layers as nn
+    from repro.parallel.mesh_utils import smap
+
+    dtype = dtype or jnp.bfloat16
+
+    def step(params, batch, carry):
+        params = nn.Policy(compute_dtype=dtype).cast(params)
+        prev = (carry["msa0"].astype(dtype), carry["z"].astype(dtype),
+                carry["x"])
+        sf = carry["sf"].astype(dtype)
+        conv, n_rec, active = carry["conv"], carry["n_rec"], carry["active"]
+        pair_mask, pair_count = af2.fold_pair_mask(batch)
+        prev, sf, conv, n_rec = af2.fold_cycle(
+            params, cfg, batch, prev, sf, conv, n_rec, tol=tol,
+            pair_mask=pair_mask, pair_count=pair_count,
+            block_fn=built.block_fn, stack_io=built.stack_io, dtype=dtype,
+            active=active)
+        out = af2.fold_heads(params, cfg, prev[1], sf)
+        out.update(coords=prev[2], n_recycles=n_rec, converged=conv)
+        new_carry = {
+            "msa0": prev[0].astype(jnp.float32),
+            "z": prev[1].astype(jnp.float32),
+            "x": prev[2],
+            "sf": sf.astype(jnp.float32),
+            "conv": conv, "n_rec": n_rec, "active": active,
+        }
+        return new_carry, out
+
+    mesh = built.mesh
+    if mesh.devices.size == 1:
+        return jax.jit(step)
+
+    from jax.sharding import PartitionSpec as P
+
+    def sharded(params, batch, carry):
+        state_specs = jax.tree_util.tree_map(lambda _: P(), params)
+        batch_specs = jax.tree_util.tree_map(lambda _: built.batch_spec,
+                                             batch)
+        carry_specs = {k: built.batch_spec for k in RECYCLE_CARRY_KEYS}
+        out_specs = (carry_specs,
+                     {k: built.batch_spec for k in PREDICT_OUTPUT_KEYS})
+        fn = smap(step, mesh,
+                  in_specs=(state_specs, batch_specs, carry_specs),
+                  out_specs=out_specs)
+        return fn(params, batch, carry)
+
+    return jax.jit(sharded)

@@ -1,0 +1,64 @@
+"""Sequence-hash LRU result cache for fold serving (DESIGN.md §12).
+
+Identical sequences are common at consumer scale (popular proteins, retried
+jobs, A/B'd pipelines re-submitting the same target).  Folding is
+deterministic given the features — ``core.model.predict`` draws no serving
+RNG — so a canonical digest of the request features
+(``data.featurize.feature_digest``) fully identifies the result, and a hit
+short-circuits the accelerator stage entirely: the scheduler answers from
+the cache with ~zero model latency and the TPU never sees the request.
+
+Entries are stored by reference; FoldResult arrays are immutable by
+convention (nothing in the serving path writes to a result after harvest).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional
+
+
+class ResultCache:
+    """LRU {feature digest -> FoldResult} with hit/miss/eviction counters."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._d: "OrderedDict[str, object]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, digest: str) -> Optional[object]:
+        hit = self._d.get(digest)
+        if hit is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(digest)
+        self.hits += 1
+        return hit
+
+    def put(self, digest: str, result) -> None:
+        if digest in self._d:
+            self._d.move_to_end(digest)
+        self._d[digest] = result
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, digest: str) -> bool:
+        return digest in self._d
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    @property
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions, "size": len(self._d),
+                "capacity": self.capacity, "hit_rate": round(self.hit_rate, 4)}

@@ -85,6 +85,7 @@ class TrainRunner:
         self.eval_batch_size = eval_batch_size
         self.eval_n_recycle = eval_n_recycle or self.max_recycle
         self.ckpt_every = ckpt_every
+        self.devices = devices
         self.optimizer = optimizer or optim_lib.adamw(
             optim_lib.af2_lr_schedule(1e-3, warmup_steps=100),
             per_sample_clip=0.1)
@@ -101,18 +102,14 @@ class TrainRunner:
         # executable for input layouts (first call: fresh arrays; later
         # calls: step outputs) — that is draw-independent and not a retrace,
         # so it deliberately does not count.
-        self._traces = {"train": 0, "eval": 0}
+        self._traces = {"train": 0}
 
         def counted_step(state, batch, rng, nr):
             self._traces["train"] += 1
             return step_fn(state, batch, rng, nr)
-        eval_fn = self._make_eval_step()
-
-        def counted_eval(params, batch):
-            self._traces["eval"] += 1
-            return eval_fn(params, batch)
         self._train_step = jax.jit(counted_step, donate_argnums=(0,))
-        self._eval_step = jax.jit(counted_eval)
+        self._eval_eng = None   # lazy FoldEngine; see _eval_engine()
+        self._lddt = None
 
         params = af2.init_params(jax.random.PRNGKey(seed), cfg)
         self.state = {"params": params, "opt": self.optimizer.init(params)}
@@ -140,7 +137,10 @@ class TrainRunner:
 
     @property
     def eval_compiles(self) -> int:
-        return self._traces["eval"]
+        """Eval goes through the serving-side step cache: this is the eval
+        FoldEngine's ``compile_misses`` — bounded by its (single-bucket)
+        bucket table, not by how often ``evaluate()`` runs."""
+        return self._eval_eng.compile_misses if self._eval_eng else 0
 
     @property
     def compile_misses(self) -> int:
@@ -159,24 +159,30 @@ class TrainRunner:
 
     # -- eval ----------------------------------------------------------------
 
-    def _make_eval_step(self):
-        import jax
-        import jax.numpy as jnp
-        from repro.core import heads as heads_lib
-        from repro.core import model as af2
-        cfg, nr = self.cfg, self.eval_n_recycle or 1
-
-        def eval_step(params, batch):
-            def one(sample):
-                out = af2.forward(params, cfg, sample, n_recycle=nr,
-                                  deterministic=True)
-                lddt = heads_lib.lddt_ca(out["trans"], sample["true_trans"],
-                                         sample["res_mask"])
-                return lddt, out["trans"].astype(jnp.float32)
-            # lax.map, not vmap: one protein in flight at a time, same live
-            # memory as the train scan
-            return jax.lax.map(one, batch)
-        return eval_step
+    def _eval_engine(self):
+        """Eval rides the serving substrate (the carried ROADMAP item):
+        ONE full-shape bucket, the training plan normalized with
+        ``ParallelPlan.for_inference()`` (branch folds into data, remat
+        drops, dap survives) so fine-tune-shape evals reuse the inference
+        memory footprint and sharding instead of the training layout.  The
+        jitted predict step lives in the engine's (bucket, plan) cache —
+        compiled once, reused by every ``evaluate()`` call."""
+        if self._eval_eng is None:
+            import jax
+            from repro.core import heads as heads_lib
+            from repro.serve import fold_steps as fs
+            from repro.serve.fold_engine import FoldEngine
+            cfg = self.cfg
+            devices = self.devices
+            if devices is None:
+                devices = jax.devices()[:self.plan.for_inference().n_devices]
+            self._eval_eng = FoldEngine(
+                cfg, self.state["params"],
+                buckets=[fs.Bucket(cfg.n_res, cfg.n_seq, cfg.n_extra_seq)],
+                plan=self.plan, micro_batch=self.eval_batch_size,
+                max_recycle=self.eval_n_recycle, tol=0.0, devices=devices)
+            self._lddt = jax.jit(jax.vmap(heads_lib.lddt_ca))
+        return self._eval_eng
 
     def eval_params(self):
         """Parameters eval runs with: the EMA copy when enabled, else raw."""
@@ -186,18 +192,37 @@ class TrainRunner:
         """lDDT-Cα over the held-out split (see ``protein_batch(split='val')``)
         with the EMA parameters.  Returns the mean, the per-sample profile,
         and the predicted coords (so callers can re-score with a standalone
-        oracle — pinned to 1e-5 in tests)."""
+        oracle — pinned to 1e-5 in tests).
+
+        Runs ``core.model.predict`` (tol=0: exactly ``eval_n_recycle``
+        cycles, reproducing ``forward``) through the eval FoldEngine's
+        cached step — see ``_eval_engine``.
+        """
         from repro.data.protein import protein_batch
-        params = self.eval_params()
+        from repro.serve import fold_steps as fs
+        eng = self._eval_engine()
+        eng.params = params = self.eval_params()
+        bucket = eng.buckets[0]
+        step = eng.step_for(bucket)
+        ext = eng.slots_for(bucket)
+        keys = fs.REQUEST_FEATURE_KEYS + ("res_mask",)
         lddts, coords, truths, masks = [], [], [], []
         for b in range(self.eval_batches):
             batch = protein_batch(self.seed, b, self.eval_batch_size,
                                   self.cfg, split="val")
-            l, c = self._eval_step(params, batch)
-            lddts.append(np.asarray(l))
-            coords.append(np.asarray(c))
-            truths.append(np.asarray(batch["true_trans"]))
-            masks.append(np.asarray(batch["res_mask"]))
+            fb = {k: np.asarray(batch[k]) for k in keys}
+            if ext > self.eval_batch_size:    # round up to the plan's
+                fb = {k: np.concatenate(      # data extent; extras dropped
+                    [v, np.repeat(v[-1:], ext - self.eval_batch_size, 0)])
+                    for k, v in fb.items()}
+            out = step(params, fb)
+            c = np.asarray(out["coords"])[:self.eval_batch_size]
+            tt = np.asarray(batch["true_trans"])
+            rm = np.asarray(batch["res_mask"])
+            lddts.append(np.asarray(self._lddt(c, tt, rm)))
+            coords.append(c)
+            truths.append(tt)
+            masks.append(rm)
         lddts = np.concatenate(lddts)
         return {"lddt_ca": float(lddts.mean()),
                 "per_sample": lddts,

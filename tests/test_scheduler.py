@@ -1,0 +1,256 @@
+"""Continuous-batching scheduler invariants (DESIGN.md §12), on a FAKE
+(virtual) clock — zero wall-time flakiness, every latency below is a pure
+function of the injected per-bucket step costs.
+
+The load-bearing invariant: slot math is per-sample under vmap (no
+cross-batch reductions in the fold path), so a request's result is
+INDEPENDENT of the admission schedule — continuous, FIFO, and the whole-fold
+predict step all produce the same fold.  Everything else (admission can't
+touch in-flight budgets, cache hits are bit-identical) follows from it.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import model as af2
+from repro.core.config import af2_tiny
+from repro.data.featurize import FeaturizePipeline, feature_digest
+from repro.launch.serve import make_fold_requests
+from repro.serve.fold_engine import FoldEngine
+from repro.serve.fold_steps import Bucket
+from repro.serve.result_cache import ResultCache
+from repro.serve.scheduler import VirtualClock
+
+pytestmark = pytest.mark.serve_load
+
+BUCKETS = [Bucket(8, 4, 6), Bucket(16, 8, 12)]
+SMALL, BIG = BUCKETS
+# injected deterministic step costs: the big bucket is 3x the small one
+COSTS = {SMALL: 1.0, BIG: 3.0}
+MAX_RECYCLE = 3
+
+
+def _cfg():
+    return dataclasses.replace(af2_tiny(), n_evoformer=1,
+                               n_extra_msa_blocks=1)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = _cfg()
+    params = af2.init_params(jax.random.PRNGKey(0), cfg)
+    # tol=0 never converges (strict <): every fold runs EXACTLY max_recycle
+    # cycles, so virtual finish times are fully deterministic
+    eng = FoldEngine(cfg, params, buckets=BUCKETS, micro_batch=2,
+                     max_recycle=MAX_RECYCLE, tol=0.0, dtype=jnp.float32)
+    return cfg, eng
+
+
+def _requests(cfg, n, **stamps):
+    reqs = make_fold_requests(cfg, n, seed=0)
+    for r in reqs:
+        for k, v in stamps.items():
+            setattr(r, k, v)
+    return reqs
+
+
+def _serve(eng, reqs, **kw):
+    kw.setdefault("clock", VirtualClock())
+    kw.setdefault("step_cost", COSTS)
+    out = eng.serve([dataclasses.replace(r) for r in reqs], **kw)
+    return out, eng.last_report
+
+
+def test_results_schedule_independent(engine):
+    """Continuous == FIFO bit-identically; both match the whole-fold
+    predict step to forward tolerance (different jit boundaries)."""
+    cfg, eng = engine
+    reqs = _requests(cfg, 6)
+    for i, r in enumerate(reqs):
+        r.arrival_s = 0.4 * i
+    cont, _ = _serve(eng, reqs, policy="continuous")
+    fifo, _ = _serve(eng, reqs, policy="fifo")
+    run_res = eng.run([dataclasses.replace(r) for r in reqs])
+    assert set(cont) == set(fifo) == set(run_res) == set(range(6))
+    for rid in cont:
+        assert np.array_equal(cont[rid].coords, fifo[rid].coords)
+        assert np.array_equal(cont[rid].plddt, fifo[rid].plddt)
+        assert cont[rid].n_recycles == fifo[rid].n_recycles \
+            == run_res[rid].n_recycles
+        np.testing.assert_allclose(cont[rid].coords, run_res[rid].coords,
+                                   atol=1e-4)
+
+
+def test_admission_never_touches_inflight_budget(engine):
+    """A mid-flight admission must not change an in-flight sample's coords,
+    recycle count, or finish time — the freeze-mask invariant."""
+    cfg, eng = engine
+    a, b = _requests(cfg, 2)        # both fit the SMALL bucket? no: mixed
+    # force same bucket: reuse a's features for b (values differ via rid
+    # only in stamps; identical features are fine — no cache in play)
+    b = dataclasses.replace(b, features=a.features)
+    a.arrival_s, b.arrival_s = 0.0, 1.5   # b lands mid-recycle of a
+    solo, _ = _serve(eng, [a], policy="continuous")
+    both, _ = _serve(eng, [a, b], policy="continuous")
+    assert np.array_equal(solo[0].coords, both[0].coords)
+    assert solo[0].n_recycles == both[0].n_recycles == MAX_RECYCLE
+    assert solo[0].finish_s == both[0].finish_s
+
+
+def test_deadline_ordering_across_buckets(engine):
+    """With every request ready at t=0, the first step must go to the lane
+    holding the tightest deadline — regardless of arrival order."""
+    cfg, eng = engine
+    reqs = _requests(cfg, 2, arrival_s=0.0)
+    small = next(r for r in reqs
+                 if r.features["target_feat"].shape[0] <= SMALL.n_res)
+    big = next(r for r in reqs
+               if r.features["target_feat"].shape[0] > SMALL.n_res)
+    small.deadline_s, big.deadline_s = 100.0, 5.0
+    _, rep = _serve(eng, [small, big], policy="continuous")
+    assert rep["trace"][0]["bucket"] == BIG     # tightest deadline first
+    small.deadline_s, big.deadline_s = 5.0, 100.0
+    _, rep = _serve(eng, [small, big], policy="continuous")
+    assert rep["trace"][0]["bucket"] == SMALL
+    # priority outranks deadline
+    big.priority = 1
+    _, rep = _serve(eng, [small, big], policy="continuous")
+    assert rep["trace"][0]["bucket"] == BIG
+
+
+def test_starvation_bound_fires(engine):
+    """A deadline-less request behind a stream of urgent ones is forced in
+    after at most ``starvation_steps`` passed-over steps."""
+    cfg, eng = engine
+    reqs = _requests(cfg, 12, arrival_s=0.0)
+    urgent = [r for r in reqs
+              if r.features["target_feat"].shape[0] <= SMALL.n_res]
+    victim = next(r for r in reqs
+                  if r.features["target_feat"].shape[0] > SMALL.n_res)
+    for r in urgent:
+        r.deadline_s = 2.0          # always more urgent than the victim
+    victim.deadline_s = None
+
+    def first_victim_step(starvation_steps):
+        _, rep = _serve(eng, urgent + [victim], policy="continuous",
+                        starvation_steps=starvation_steps)
+        idx = next(i for i, t in enumerate(rep["trace"])
+                   if t["bucket"] == BIG)
+        return idx, rep["forced_admissions"]
+
+    idx_tight, forced_tight = first_victim_step(2)
+    idx_loose, forced_loose = first_victim_step(10**6)
+    assert forced_tight >= 1, "starvation bound never fired"
+    assert idx_tight <= 2
+    assert forced_loose == 0
+    assert idx_loose > idx_tight    # without the bound the victim waits
+
+
+def test_cache_hit_bit_identical_and_short_circuits(engine):
+    """A repeated sequence answers from the cache with zero model steps,
+    bit-identical to its cold fold."""
+    cfg, eng = engine
+    a, = _requests(cfg, 1, arrival_s=0.0)
+    dup = dataclasses.replace(a, rid=99, arrival_s=50.0)   # after a's fold
+    cache = ResultCache(8)
+    out, rep = _serve(eng, [a, dup], policy="continuous", cache=cache)
+    assert out[99].cache_hit and not out[0].cache_hit
+    assert np.array_equal(out[0].coords, out[99].coords)
+    assert np.array_equal(out[0].plddt, out[99].plddt)
+    assert cache.stats["hits"] == 1 and rep["hit_rate"] == 0.5
+    # the hit consumed NO model steps: same step count as serving a alone
+    _, rep_solo = _serve(eng, [a], policy="continuous")
+    assert rep["steps"] == rep_solo["steps"] == MAX_RECYCLE
+    assert out[99].latency_s == 0.0     # featurize-only, virtual-instant
+
+
+def test_compile_misses_bounded_under_continuous_admission():
+    """Sustained mixed traffic through serve() compiles at most one recycle
+    step per bucket — the FoldEngine contract, continuous-batching side."""
+    cfg = _cfg()
+    params = af2.init_params(jax.random.PRNGKey(0), cfg)
+    eng = FoldEngine(cfg, params, buckets=BUCKETS, micro_batch=2,
+                     max_recycle=2, tol=0.0, dtype=jnp.float32)
+    reqs = _requests(cfg, 9)
+    for i, r in enumerate(reqs):
+        r.arrival_s = 0.7 * i
+    _serve(eng, reqs, policy="continuous")
+    assert eng.compile_misses == len(BUCKETS)
+    _serve(eng, reqs[:4], policy="continuous")   # more traffic, same cells
+    _serve(eng, reqs[:4], policy="fifo")
+    assert eng.compile_misses == len(BUCKETS)
+
+
+def test_continuous_beats_fifo_p99_under_load(engine):
+    """The tentpole claim at test scale: mid-flight admission beats
+    drain-to-completion on tail latency for staggered same-bucket arrivals
+    (deterministic: fake clock + tol=0)."""
+    cfg, eng = engine
+    a, b = _requests(cfg, 2)
+    b = dataclasses.replace(b, features=a.features)   # same (small) bucket
+    a.arrival_s, b.arrival_s = 0.0, 1.5
+    out_c, rep_c = _serve(eng, [a, b], policy="continuous")
+    out_f, rep_f = _serve(eng, [a, b], policy="fifo")
+    # fifo: b waits for a's full fold (finish 3.0) then folds alone ->
+    # b latency = (3.0 - 1.5) + 3.0 = 4.5; continuous admits b into a's
+    # next step -> b finishes at 5.0, latency 3.5
+    assert rep_c["p99_ms"] < rep_f["p99_ms"]
+    assert out_c[b.rid].latency_s == pytest.approx(3.5)
+    assert out_f[b.rid].latency_s == pytest.approx(4.5)
+    assert out_c[a.rid].latency_s == out_f[a.rid].latency_s \
+        == pytest.approx(3.0)
+
+
+def test_featurize_pipeline_inline_and_threaded():
+    """Threaded featurize returns the same items as inline (set equality by
+    rid/digest); bucket-aware prefetch depth is deeper for small buckets."""
+    cfg = _cfg()
+    reqs = make_fold_requests(cfg, 6, seed=0)
+    inline = FeaturizePipeline(BUCKETS, workers=0)
+    for r in reqs:
+        inline.submit(r)
+    got_inline = {(i.request.rid, i.digest, i.bucket)
+                  for i in inline.poll()}
+    threaded = FeaturizePipeline(BUCKETS, workers=3)
+    try:
+        for r in reqs:
+            threaded.submit(r)
+        got_threaded = set()
+        while len(got_threaded) < len(reqs):
+            got_threaded |= {(i.request.rid, i.digest, i.bucket)
+                             for i in threaded.poll(block=True)}
+    finally:
+        threaded.close()
+    assert got_inline == got_threaded and len(got_inline) == len(reqs)
+    assert inline.depth_for(SMALL) >= inline.depth_for(BIG)
+    assert inline.stats["featurized"] == len(reqs)
+
+
+def test_feature_digest_canonical():
+    cfg = _cfg()
+    a, b = make_fold_requests(cfg, 2, seed=0)
+    d1 = feature_digest(a.features)
+    # dict order must not matter
+    d2 = feature_digest(dict(reversed(list(a.features.items()))))
+    assert d1 == d2
+    assert d1 != feature_digest(b.features)
+    bumped = dict(a.features)
+    bumped["residue_index"] = np.asarray(bumped["residue_index"]) + 1
+    assert d1 != feature_digest(bumped)
+
+
+def test_result_cache_lru_and_stats():
+    c = ResultCache(2)
+    assert c.get("a") is None            # miss
+    c.put("a", 1), c.put("b", 2)
+    assert c.get("a") == 1               # refreshes a
+    c.put("c", 3)                        # evicts b (LRU)
+    assert c.get("b") is None and c.get("c") == 3
+    assert c.stats["evictions"] == 1 and c.stats["size"] == 2
+    assert c.stats["hits"] == 2 and c.stats["misses"] == 2
+    assert c.hit_rate == 0.5
+    with pytest.raises(ValueError):
+        ResultCache(0)
