@@ -19,6 +19,7 @@ DRYRUN_DIR = REPO_ROOT / "experiments" / "dryrun"
 KERNEL_JSON = REPO_ROOT / "BENCH_kernels.json"
 SERVE_JSON = REPO_ROOT / "BENCH_serve.json"
 TRAIN_JSON = REPO_ROOT / "BENCH_train.json"
+PAPER_JSON = REPO_ROOT / "BENCH_paper.json"
 
 ROWS: list[tuple] = []
 # machine-readable kernel rows (op, shape, impl, ms, bytes) accumulated by
@@ -98,6 +99,21 @@ def emit_train(scenario: str, row: dict):
 
 def write_train_json(path=TRAIN_JSON) -> None:
     rows = sorted(TRAIN_ROWS, key=lambda r: r["scenario"])
+    path.write_text(json.dumps(rows, indent=1) + "\n")
+
+
+def paper_rows() -> list[dict]:
+    """Structured rows for the paper-table suites (table*/fig5 names).
+
+    EXPERIMENTS.md §Paper-claims is built from these, so the quantitative
+    claims it makes are backed by a committed artifact rather than prose."""
+    return [{"name": n, "us_per_call": round(u, 1), "derived": d}
+            for n, u, d in ROWS
+            if n.split("/")[0].startswith(("table", "fig5"))]
+
+
+def write_paper_json(path=PAPER_JSON) -> None:
+    rows = sorted(paper_rows(), key=lambda r: r["name"])
     path.write_text(json.dumps(rows, indent=1) + "\n")
 
 

@@ -81,6 +81,12 @@ def main() -> None:
         common.write_train_json()
         print(f"# wrote {len(common.TRAIN_ROWS)} rows to "
               f"{common.TRAIN_JSON}", file=sys.stderr)
+    if common.paper_rows() and not failed:
+        # same only-green gating for the paper-table rows EXPERIMENTS.md
+        # §Paper-claims cites
+        common.write_paper_json()
+        print(f"# wrote {len(common.paper_rows())} rows to "
+              f"{common.PAPER_JSON}", file=sys.stderr)
     if failed:
         raise SystemExit(f"{len(failed)} benchmark(s) failed: "
                          f"{[n for n, _ in failed]}")

@@ -1,14 +1,26 @@
-"""Generate EXPERIMENTS.md tables from experiments/dryrun/*.json.
+"""Generate EXPERIMENTS.md from recorded artifacts.
 
-Narrative sections live in this script; tables are rebuilt from artifacts so
-the document always matches the recorded dry-runs.
-Usage: python scripts/make_experiments_md.py
+Tables come from experiments/dryrun/*.json (written by repro.launch.dryrun;
+`bash scripts/regen_dryrun.sh` regenerates the full set) and the committed
+BENCH_*.json trajectories (written by a fully-green `python -m
+benchmarks.run`).  Narrative sections live in this script, but every section
+that cites a number is gated on the artifact that substantiates it: missing
+artifacts produce an explicit "(artifacts missing — section omitted)" marker,
+never silently-empty tables, and a fully-empty artifact set is a hard error
+unless --allow-partial is passed.
+
+Usage: python scripts/make_experiments_md.py [--allow-partial]
 """
+import argparse
 import json
 import pathlib
+import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DRY = ROOT / "experiments" / "dryrun"
+PAPER_JSON = ROOT / "BENCH_paper.json"
+
+REGEN_HINT = "regenerate with `bash scripts/regen_dryrun.sh`"
 
 
 def load(pattern):
@@ -23,11 +35,23 @@ def load(pattern):
     return out
 
 
+def get1(pattern):
+    """First OK record matching pattern, else None (section gating)."""
+    recs = load(pattern)
+    return recs[0] if recs and recs[0].get("status") == "ok" else None
+
+
+def missing(what, hint=REGEN_HINT):
+    return f"\n*({what} — artifacts missing; section omitted. Please {hint}.)*\n"
+
+
 def fmt_bytes(b):
     return f"{b / 1e9:.1f}"
 
 
 def dryrun_table(recs):
+    if not recs:
+        return f"*(no cells recorded — {REGEN_HINT})*"
     rows = ["| arch | shape | mesh | status | compile s | HLO GFLOP/dev | "
             "coll MB/dev (static) | temp GB/dev | peak GB/dev |",
             "|---|---|---|---|---|---|---|---|---|"]
@@ -56,13 +80,14 @@ WHAT_MOVES = {
 
 
 def roofline_table(recs):
+    recs = [r for r in recs if r.get("status") == "ok" and "roofline" in r]
+    if not recs:
+        return f"*(no roofline artifacts recorded — {REGEN_HINT})*"
     rows = ["| arch | shape | compute s | memory s | collective s | "
             "dominant | roofline frac | MODEL_FLOPS | HLO/MODEL | "
             "what moves the dominant term |",
             "|---|---|---|---|---|---|---|---|---|---|"]
     for r in recs:
-        if r.get("status") != "ok" or "roofline" not in r:
-            continue
         t = r["roofline"]
         ratio = (1.0 / t["useful_flops_ratio"]
                  if t.get("useful_flops_ratio") else float("nan"))
@@ -75,56 +100,355 @@ def roofline_table(recs):
     return "\n".join(rows)
 
 
-def perf_delta(base, opt, keys=("per_device_flops", "per_device_bytes",
-                                "collective_bytes_static")):
-    b = base["probe"]["extrapolated"]
-    o = opt["probe"]["extrapolated"]
-    out = {}
-    for k in keys:
-        out[k] = (b[k], o[k], (o[k] - b[k]) / max(b[k], 1e-12))
-    return out
+def skips_section(single, multi):
+    """Runnable/skipped accounting computed from the artifact set (the
+    static '32 + 8 = 40' prose this replaces could contradict the tables)."""
+    recs = single + multi
+    if not recs:
+        return missing("Skipped-cells accounting (needs the LM artifact set)")
+    archs = sorted({r["arch"] for r in recs})
+    long_archs = sorted({r["arch"] for r in recs
+                         if r.get("shape") == "long_500k"})
+    no_long = [a for a in archs if a not in long_archs]
+    ok = sum(1 for r in recs if r.get("status") == "ok")
+    lines = ["\n### Skipped cells (computed from the artifact set, "
+             "per DESIGN.md §5)\n"]
+    if long_archs:
+        lines.append(
+            "`long_500k` requires sub-quadratic attention; it is recorded "
+            "for " + ", ".join(f"**{a}**" for a in long_archs)
+            + " (SSM/hybrid state decode) and has no cell for the "
+            f"{len(no_long)} pure full-attention archs: "
+            + ", ".join(no_long) + ".")
+    lines.append(
+        f"Recorded: {len(single)} single-pod + {len(multi)} multi-pod LM "
+        f"cells ({ok} ok); skipped: {len(no_long)} `long_500k` cells per "
+        "mesh (no artifact written — skipped by `arch_shapes`, not failed).")
+    return "\n".join(lines)
 
 
-def main():
+def roofline_notes(single, af2, h1, h2):
+    """The 'reading the table' bullets, each gated on (and computed from)
+    the artifacts it cites so no bullet references an absent section."""
+    ok = [r for r in single if r.get("status") == "ok" and "roofline" in r]
+    bullets = []
+    train_mem = [r["roofline"]["roofline_fraction"] for r in ok
+                 if r["shape"] == "train_4k" and "moe" not in r["arch"]
+                 and r["roofline"]["dominant"] == "memory"]
+    if train_mem:
+        bullets.append(
+            "* **Dense train cells** are memory-bound at these batch sizes "
+            "(bf16 activations + fp32 LN casts + remat re-reads); roofline "
+            f"fraction {min(train_mem):.2f}-{max(train_mem):.2f}.")
+    if h1[0]:
+        ratio = 1.0 / h1[0]["roofline"]["useful_flops_ratio"]
+        note = (f"* **MoE train cells (baseline)** burn HLO/MODEL ≈ "
+                f"{ratio:.0f}x compiled FLOPs on the O(T²) one-hot "
+                f"dispatch (dominant: {h1[0]['roofline']['dominant']})")
+        bullets.append(note + (" — fixed in §Perf H1." if h1[1] else "."))
+    if h2[0]:
+        dom = h2[0]["roofline"]["dominant"]
+        bullets.append(
+            f"* **Decode cells (baseline)** are *{dom}*-bound (weight reads "
+            "+ head-dim-sharded KV-cache traffic; GSPMD emits cache-reshard "
+            "'involuntary full rematerialization' warnings at compile) — "
+            "the decode-sharding hillclimb is §Perf H2.")
+    if af2:
+        bullets.append(
+            "* **AlphaFold2** is memory-bound (tiny channels, LN-heavy): "
+            "the TPU manifestation of the paper's 'small kernels' "
+            "observation. BP does not change per-op intensity (by design); "
+            "DAP lowers per-device bytes but pays all-gathers: the modeled "
+            "trade on TPU differs from the paper's GPU launch-overhead "
+            "argument — see §Paper-claims.")
+    whisper = [r for r in ok if r["arch"] == "whisper-medium"
+               and r["shape"] == "prefill_32k"
+               and r["roofline"].get("useful_flops_ratio", 0) > 1]
+    if whisper:
+        bullets.append(
+            "* `whisper prefill` HLO/MODEL < 1 is an accounting artifact: "
+            "the analytical prefill token count uses the decoder seq_len "
+            "while whisper prefill consumes 1500 encoder frames + 1 "
+            "decoder token.")
+    if not bullets:
+        return missing("Reading-the-table notes (need roofline artifacts)")
+    return ("\n### Reading the table — dominant bottlenecks\n\n"
+            + "\n".join(bullets))
+
+
+def _row(rec):
+    t = rec["roofline"]
+    m = rec["full"]["memory"]
+    return (f"compute {t['compute_s']:.3f}s | memory {t['memory_s']:.3f}s | "
+            f"collective {t['collective_s']:.3f}s | bound "
+            f"{t['step_lower_bound_s']:.3f}s | dominant {t['dominant']} | "
+            f"peak {m['peak_bytes_estimate']/1e9:.1f} GB/dev | useful "
+            f"{t['useful_flops_ratio']:.3f}")
+
+
+def perf_section(h1, h2, h3):
+    out = ["\n## §Perf — hillclimbing log\n" + PERF_PREAMBLE]
+    emitted = 0
+
+    # ---------------- H1: MoE dispatch ----------------
+    base, opt = h1
+    if base and opt:
+        emitted += 1
+        rb, ro = base["roofline"], opt["roofline"]
+        speed = rb["step_lower_bound_s"] / ro["step_lower_bound_s"]
+        v1 = ("CONFIRMED" if speed >= 1.05
+              and ro["compute_s"] < rb["compute_s"]
+              else "NOT CONFIRMED on this artifact set")
+        out.append(f"""
+### H1 — qwen2-moe-a2.7b x train_4k (worst useful-FLOPs cell)
+
+**Iteration 1 — sorted dispatch.** Hypothesis (napkin): GShard one-hot
+dispatch/combine einsums cost O(T·E·C·D) ≈ O(T²·k·cf·D/E) FLOPs per device;
+at T = 65k tokens/device that is ~{rb['hlo_flops_global']/1e18:.0f}e18 HLO
+FLOPs per step — {1/rb['useful_flops_ratio']:.0f}x the expert FFN math
+itself (useful ratio {rb['useful_flops_ratio']:.3f}). An argsort+scatter
+dispatch (O(T·k·D) data movement, models/moe.py: `sorted_dispatch`,
+numerically identical incl. drop pattern — tests/test_moe.py) should
+collapse the compute term.
+
+- before: {_row(base)}
+- after:  {_row(opt)}
+- **{v1}**: compute {rb['compute_s']:.1f}s -> {ro['compute_s']:.2f}s
+  ({rb['compute_s']/ro['compute_s']:.0f}x), step bound {speed:.1f}x better;
+  useful-FLOPs ratio {rb['useful_flops_ratio']:.3f} -> {ro['useful_flops_ratio']:.3f}.
+  The dominant term is now **{ro['dominant']}**.
+
+**Iteration 2 — pin EP sharding on the expert buffer.** Hypothesis: a
+`with_sharding_constraint(xe, P('model',None,None))` forces one clean a2a
+instead of GSPMD's choice. Measured: collective bytes TRIPLED — the
+constraint forced a resharding of BOTH the scatter output and the gather
+input. **REFUTED**; reverted (comment left at models/moe.py; the reverted
+lowering's artifact was not retained in experiments/dryrun/). Lesson: on
+scatter/gather-shaped dataflow, GSPMD's inferred sharding beat our
+hand-pin; constraints belong on stable layer boundaries, not inside
+dispatch.
+
+Next (modeled, not yet measured): hierarchical two-stage dispatch (intra-node
+a2a then inter-node) to cut the remaining collective term; paper-era MegaBlocks
+grouped-GEMM kernel for ragged expert batches.""")
+    else:
+        out.append("\n### H1 — MoE dispatch hillclimb\n"
+                   + missing("baseline + `_opt_moe_sorted` dry-run pair"))
+
+    # ---------------- H2: decode sharding ----------------
+    b0, b1, b2 = h2
+    if b0 and b1 and b2:
+        emitted += 1
+        sp = (b0["roofline"]["step_lower_bound_s"]
+              / b2["roofline"]["step_lower_bound_s"])
+        if sp >= 1.05:
+            v3 = "CONFIRMED"
+            h2_comment = (
+                f"now **{b2['roofline']['dominant']}**-bound — the correct "
+                "physics for batched decode. Remaining: serve from bf16 "
+                "weights (no fp32 masters at inference) to halve the "
+                "remaining memory term.")
+        else:
+            v3 = "REFUTED on this artifact set"
+            h2_comment = (
+                "the factored mesh lowers peak HBM ("
+                f"{b0['full']['memory']['peak_bytes_estimate']/1e9:.0f} -> "
+                f"{b2['full']['memory']['peak_bytes_estimate']/1e9:.0f} "
+                "GB/dev — the cache now divides by all chips) but its "
+                "static-collective roofline term is LARGER at these shapes "
+                "on the current codebase, so the hand-factored mesh does "
+                "not beat the baseline's step bound here; `factored_decode` "
+                "stays opt-in, not the default.")
+        out.append(f"""
+### H2 — deepseek-67b x decode_32k (decode sharding; baseline dominant: {b0['roofline']['dominant']})
+
+Baseline: {_row(b0)} — {b0['roofline']['collective_s']:.1f}s of collectives
+*per decoded token*: the KV cache (kv=8 heads < tp=16) was head-dim-sharded,
+so the QK contraction lives on the model axis and XLA also resharded the
+cache around the scatter write ('involuntary full rematerialization'
+warnings).
+
+**Iteration 1 — uniform-length cache write** (scalar-index
+dynamic-update-slice instead of per-sequence scatter; exact under the
+serve_step contract). Measured: {_row(b1)} — collective term barely moved.
+**REFUTED** as the root cause: the reshard came from the attention einsum's
+preferred sharding, not (only) the scatter. Kept anyway (it removes the
+scatter warnings and is strictly cheaper).
+
+**Iteration 2 — replicate the cache over the model axis.** Attention becomes
+fully local, but peak HBM multiplies by tp (cache x16 replication) —
+**partial**: right collectives, wrong memory; not shippable on 16 GB v5e.
+Exploratory lowering; its artifact was not retained in experiments/dryrun/.
+
+**Iteration 3 — 2-D factored decode mesh** (`serve.steps.decode_mesh_plan`):
+refactor model -> (kvh=gcd(kv,16)=8) x (brep=2) and push brep onto the batch
+dim: heads shard 8-way, batch 32-way, attention fully local, cache divides by
+all 256 chips.
+
+- after: {_row(b2)}
+- **{v3}**: step bound {b0['roofline']['step_lower_bound_s']:.2f}s ->
+  {b2['roofline']['step_lower_bound_s']:.3f}s ({sp:.2f}x),
+  collectives {b0['roofline']['collective_s']:.2f}s -> {b2['roofline']['collective_s']:.3f}s;
+  {h2_comment}""")
+    else:
+        out.append("\n### H2 — decode-sharding hillclimb\n"
+                   + missing("baseline + `_opt_uniform_decode` + "
+                             "`_opt_factored_decode` dry-run cells"))
+    i0 = get1("internvl2-26b__decode_32k__single_pod.json")
+    i2 = get1("internvl2-26b__decode_32k__single_pod_opt_factored_decode.json")
+    if i0 and i2:
+        out.append(
+            f"\nSame change on internvl2-26b x decode_32k: bound "
+            f"{i0['roofline']['step_lower_bound_s']:.2f}s -> "
+            f"{i2['roofline']['step_lower_bound_s']:.3f}s "
+            f"({i0['roofline']['step_lower_bound_s']/i2['roofline']['step_lower_bound_s']:.2f}x).")
+
+    # ---------------- H3: AF2 (paper-representative) ----------------
+    a0, a1, a2, a3 = h3
+    if a0:
+        emitted += 1
+        # arithmetic intensity back out of the roofline terms (FLOP/byte):
+        # compute_s * peak_flops / (memory_s * hbm_bw), chips cancel
+        ai = (a0["roofline"]["compute_s"] * 197e12
+              / (a0["roofline"]["memory_s"] * 819e9))
+        out.append(f"""
+### H3 — AlphaFold2 initial training, BP=2 x DAP=8 x DP=16 (paper cell)
+
+Paper-faithful baseline (Parallel Evoformer + BP, fp32 params / bf16
+activations, per-block remat): {_row(a0)}.
+AF2 is **memory-bandwidth-bound** on TPU ({a0['roofline']['memory_s']:.2f}s vs
+{a0['roofline']['compute_s']:.2f}s compute — arithmetic intensity
+~{ai:.0f} FLOP/B from the tiny channel dims): this is the TPU
+manifestation of the paper's
+'many small kernels' observation, and exactly why BP (which preserves per-op
+intensity) was the right GPU-era move.""")
+        if a1:
+            out.append(
+                f"\n**Iteration 1 — remat=none.** Hypothesis: per-block remat "
+                f"doubles activation traffic; the un-rematted trunk might "
+                f"fit. Measured: memory {a0['roofline']['memory_s']:.2f}s -> "
+                f"{a1['roofline']['memory_s']:.2f}s and peak "
+                f"{a1['full']['memory']['peak_bytes_estimate']/1e9:.0f} GB/dev"
+                f" (vs {a0['full']['memory']['peak_bytes_estimate']/1e9:.0f})."
+                f" **{'REFUTED' if a1['roofline']['memory_s'] >= a0['roofline']['memory_s'] else 'CONFIRMED'}**"
+                f" — storing every intermediate costs more bytes than "
+                f"recomputing; full-block remat is a bytes optimization "
+                f"here, not just a memory one.")
+        if a2:
+            d = (a2["roofline"]["memory_s"] / a0["roofline"]["memory_s"] - 1)
+            out.append(
+                f"\n**Iteration 2 — bf16-io LayerNorm.** Hypothesis: AF2 is "
+                f"LN-dense; dropping the fp32 output round-trip saves one "
+                f"fp32 activation pass per LN. Measured: memory "
+                f"{a0['roofline']['memory_s']:.3f}s -> "
+                f"{a2['roofline']['memory_s']:.3f}s ({d:+.1%}). "
+                f"**{'REFUTED' if abs(d) < 0.05 else 'CONFIRMED'}** — XLA "
+                f"already fuses the cast chains; LN io precision is ~free on "
+                f"TPU (kept fp32, the faithful choice).")
+        if a3:
+            out.append(
+                f"\n**Iteration 3 — selective remat (save matmul outputs, "
+                f"recompute pointwise).** Measured: memory "
+                f"{a3['roofline']['memory_s']:.3f}s, peak "
+                f"{a3['full']['memory']['peak_bytes_estimate']/1e9:.0f} GB/dev"
+                f" vs full-block remat's {a0['roofline']['memory_s']:.3f}s / "
+                f"{a0['full']['memory']['peak_bytes_estimate']/1e9:.0f} GB."
+                f" **{'REFUTED' if a3['roofline']['memory_s'] >= a0['roofline']['memory_s'] else 'CONFIRMED'}.**")
+        if a1 and a2 and a3:
+            out.append("""
+Three consecutive <5%/negative iterations — stopping criterion met: the
+baseline (Parallel Evoformer + BP + full-block remat) is at the XLA-level
+optimum for this cell. The remaining lever is *kernel fusion below XLA*:
+the Pallas `evo_attention` kernel (kernels/flash_attention.py) fuses
+bias-add + online softmax + sigmoid gating into one VMEM-resident pass —
+eliminating ~2 HBM round-trips of the (s,r,h*c) attention tensor per block,
+a modeled ~15-20% cut of the memory term. It validates against its oracle in
+interpret mode (tests/test_kernels.py) but cannot lower in the CPU dry-run,
+so its effect is reported as modeled, not measured (DESIGN.md §6).""")
+    else:
+        out.append("\n### H3 — AlphaFold2 BP x DAP hillclimb\n"
+                   + missing("`af2-initial__bp2_dap8__single_pod_parallel*` "
+                             "dry-run cells"))
+
+    if emitted:
+        out.append(PERF_TRAILER)
+    else:
+        out.append(missing("Stopping-criteria trailer (refers to the "
+                           "hillclimb verdicts above)"))
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--allow-partial", action="store_true",
+                    help="write the document even when experiments/dryrun/ "
+                         "is empty (sections become explicit "
+                         "artifacts-missing markers)")
+    args = ap.parse_args(argv)
+
     single = [r for r in load("*__single_pod*.json")
               if "_opt_" not in r["_file"] and "af2" not in r["_file"]
-              and "remat" not in r["_file"]]
+              and "remat" not in r["_file"] and "lnbf16" not in r["_file"]]
     multi = [r for r in load("*__multi_pod*.json")
-             if "_opt_" not in r["_file"] and "remat" not in r["_file"]]
-    af2 = [r for r in load("af2-*__single_pod*.json")
-           if "remat" not in r["_file"]]
+             if "_opt_" not in r["_file"] and "af2" not in r["_file"]
+             and "remat" not in r["_file"] and "lnbf16" not in r["_file"]]
+    af2 = [r for r in load("af2-*.json")
+           if "remat" not in r["_file"] and "lnbf16" not in r["_file"]]
     ok = sum(1 for r in single + multi if r.get("status") == "ok")
     total = len(single) + len(multi)
 
+    if total + len(af2) == 0 and not args.allow_partial:
+        sys.exit(
+            "make_experiments_md: experiments/dryrun/ holds no artifacts — "
+            "refusing to write an empty-table EXPERIMENTS.md (it would "
+            "assert results nothing substantiates). Run `bash "
+            "scripts/regen_dryrun.sh` first, or pass --allow-partial to "
+            "emit an explicitly-partial document.")
+
+    h1 = (get1("qwen2-moe-a2_7b__train_4k__single_pod.json"),
+          get1("qwen2-moe-a2_7b__train_4k__single_pod_opt_moe_sorted.json"))
+    h2 = (get1("deepseek-67b__decode_32k__single_pod.json"),
+          get1("deepseek-67b__decode_32k__single_pod_opt_uniform_decode.json"),
+          get1("deepseek-67b__decode_32k__single_pod_opt_factored_decode.json"))
+    h3 = (get1("af2-initial__bp2_dap8__single_pod_parallel.json"),
+          get1("af2-initial__bp2_dap8__single_pod_parallel_remat-none.json"),
+          get1("af2-initial__bp2_dap8__single_pod_parallel_lnbf16.json"),
+          get1("af2-initial__bp2_dap8__single_pod_parallel_remat-dots.json"))
+
     doc = []
     doc.append(OPENING)
-    doc.append(f"\n## §Dry-run\n\n"
-               f"**{ok}/{total} cells compiled** on the production meshes "
-               "(single-pod 16x16=256 chips; multi-pod 2x16x16=512 chips), "
-               "plus the AlphaFold2 paper cells on the BP x DAP logical mesh. "
-               "Every cell = `jax.jit(step).lower(ShapeDtypeStructs).compile()`"
-               " with full parameter/optimizer/cache shardings — no device "
-               "allocation. Compile times are CPU-host times.\n")
-    doc.append("### LM cells — single-pod (16, 16) = (data, model)\n")
-    doc.append(dryrun_table(single))
-    doc.append("\n### LM cells — multi-pod (2, 16, 16) = (pod, data, model) "
-               "— compile proof (roofline is single-pod per spec)\n")
-    doc.append(dryrun_table(multi))
+    doc.append("\n## §Dry-run\n")
+    if total:
+        doc.append(
+            f"**{ok}/{total} LM cells compiled** on the production meshes "
+            "(single-pod 16x16=256 chips; multi-pod 2x16x16=512 chips), "
+            "plus the AlphaFold2 paper cells on the BP x DAP logical mesh. "
+            "Every cell = `jax.jit(step).lower(ShapeDtypeStructs).compile()`"
+            " with full parameter/optimizer/cache shardings — no device "
+            "allocation. Compile times are CPU-host times.\n")
+        doc.append("### LM cells — single-pod (16, 16) = (data, model)\n")
+        doc.append(dryrun_table(single))
+        doc.append("\n### LM cells — multi-pod (2, 16, 16) = "
+                   "(pod, data, model) — compile proof (roofline is "
+                   "single-pod per spec)\n")
+        doc.append(dryrun_table(multi))
+    else:
+        doc.append(missing("LM dry-run tables"))
     doc.append("\n### AlphaFold2 cells (logical mesh: model -> branch x dap)\n")
     doc.append(dryrun_table(af2))
-    doc.append(SKIPS)
+    doc.append(skips_section(single, multi))
 
     doc.append("\n## §Roofline\n" + ROOFLINE_PREAMBLE)
     doc.append(roofline_table(single))
     doc.append("\n### AlphaFold2 (paper model)\n")
     doc.append(roofline_table(af2))
-    doc.append(ROOFLINE_NOTES)
+    doc.append(roofline_notes(single, af2, h1, h2))
 
-    doc.append(perf_section())
+    doc.append(perf_section(h1, h2, h3))
     doc.append(ATTENTION_IMPLS)
     doc.append(serve_section())
     doc.append(train_section())
-    doc.append(PAPER_CLAIMS)
+    doc.append(paper_claims_section(af2))
     (ROOT / "EXPERIMENTS.md").write_text("\n".join(doc))
     print("wrote EXPERIMENTS.md")
 
@@ -135,8 +459,8 @@ def serve_section():
     out = [SERVING_PREAMBLE]
     path = ROOT / "BENCH_serve.json"
     if not path.exists():
-        out.append("\n(no BENCH_serve.json yet — run `python -m "
-                   "benchmarks.run`)\n")
+        out.append(missing("fold-serving table (BENCH_serve.json)",
+                           hint="run `python -m benchmarks.run`"))
         return "\n".join(out)
     rows = json.loads(path.read_text())
     out.append("| scenario | key numbers |")
@@ -153,30 +477,40 @@ def train_section():
     out = [TRAINING_PREAMBLE]
     path = ROOT / "BENCH_train.json"
     if not path.exists():
-        out.append("\n(no BENCH_train.json yet — run `python -m "
-                   "benchmarks.run`)\n")
+        out.append(missing("training-loop table (BENCH_train.json)",
+                           hint="run `python -m benchmarks.run`"))
         return "\n".join(out)
     rows = json.loads(path.read_text())
     out.append("| scenario | key numbers |")
     out.append("|---|---|")
     for r in rows:
         keys = ", ".join(f"{k}={v}" for k, v in r.items() if k != "scenario")
-        out.append(f"| {r['scenario']} | {keys} |")
+        note = ""
+        if ("loss_first" in r and "loss_last" in r
+                and float(r["loss_last"]) >= float(r["loss_first"])):
+            note = (f" — **structural smoke run** ({r.get('steps', '?')} "
+                    "steps): pins the loop mechanics (one compile, EMA "
+                    "eval, deterministic lDDT split), not accuracy; the "
+                    "loss has not started decreasing at this length and "
+                    "no convergence is expected or claimed")
+        out.append(f"| {r['scenario']} | {keys}{note} |")
     return "\n".join(out)
 
 
 TRAINING_PREAMBLE = """
 ## §Training-loop (TrainRunner)
 
-The loop that closes the paper's accuracy half (DESIGN.md §11):
+The machinery that will carry the paper's accuracy half (DESIGN.md §11):
 `TrainRunner` draws a stochastic per-step recycle count on host and feeds
 it to ONE compiled step as a traced fori_loop bound (compiles pinned at 1
 across draws — the training-side analogue of FoldEngine's bucket-bounded
 compile cache), carries EMA parameters for eval, and validates with the
 superposition-free lDDT-Cα on a held-out deterministic split.  CPU-scale
-numbers are structural: `train_tiny_throughput` measures post-compile
-steps/s; `train_tiny_lddt` records the loss + lDDT trajectory of a short
-run — the quantity the full-scale reproduction reports per ParallelPlan.
+numbers are structural evidence that the loop runs end-to-end, NOT
+accuracy evidence: `train_tiny_throughput` measures post-compile steps/s;
+`train_tiny_lddt` records the loss + lDDT trajectory of a short smoke run
+— the *quantity* the full-scale reproduction reports per ParallelPlan,
+at a length where no learning signal is expected (see row annotation).
 """
 
 
@@ -207,161 +541,103 @@ bucket table; the benchmark raises (failing the green gate) otherwise.
 """
 
 
-def _row(rec):
-    t = rec["roofline"]
-    m = rec["full"]["memory"]
-    return (f"compute {t['compute_s']:.3f}s | memory {t['memory_s']:.3f}s | "
-            f"collective {t['collective_s']:.3f}s | bound "
-            f"{t['step_lower_bound_s']:.3f}s | dominant {t['dominant']} | "
-            f"peak {m['peak_bytes_estimate']/1e9:.1f} GB/dev | useful "
-            f"{t['useful_flops_ratio']:.3f}")
+def paper_claims_section(af2_recs):
+    """§Paper-claims built from BENCH_paper.json (committed by a fully-green
+    `python -m benchmarks.run`) + the AF2 dry-run artifacts — every number
+    in the table is read from an artifact, and claims whose artifact is
+    missing are listed as pending instead of asserted."""
+    head = "\n## §Paper-claims validation\n"
+    if not PAPER_JSON.exists():
+        return head + missing("paper-claims table (BENCH_paper.json)",
+                              hint="run `python -m benchmarks.run`")
+    bench = {r["name"]: r["derived"]
+             for r in json.loads(PAPER_JSON.read_text())}
+    rows, pending = [], []
 
+    def add(claim, paper, result, verdict):
+        rows.append(f"| {claim} | {paper} | {result} | {verdict} |")
 
-def perf_section():
-    out = ["\n## §Perf — hillclimbing log\n" + PERF_PREAMBLE]
+    if all(k in bench for k in ("fig5/loss_af2", "fig5/loss_parallel",
+                                "fig5/af2_vs_parallel_traj_dist")):
+        rel = float(bench["fig5/af2_vs_parallel_traj_dist"].split("rel=")[1])
+        add("Parallel Evoformer == serial accuracy", "Fig. 5 overlap",
+            "tiny-config training-loss trajectories from identical inits: "
+            f"af2 {bench['fig5/loss_af2']}, parallel "
+            f"{bench['fig5/loss_parallel']}, mean relative distance "
+            f"{rel:.3f} (BENCH_paper.json fig5/*); BP is *exactly* serial "
+            "math (tests/test_parallel_equiv.py)",
+            "reproduced" if rel < 0.01 else "NOT reproduced")
+    else:
+        pending.append("Fig. 5 accuracy parity (fig5/* bench rows)")
 
-    def get(f):
-        r = load(f)
-        return r[0] if r and r[0].get("status") == "ok" else None
+    if "table2/variant_spread" in bench:
+        add("OPM position doesn't change step cost", "Table 2 (±0.5%)",
+            "FLOP-identical by construction (same modules, moved OPM); "
+            "measured CPU step-time "
+            f"{bench['table2/variant_spread']} is contention noise "
+            "(BENCH_paper.json table2/*)",
+            "reproduced")
+    else:
+        pending.append("Table 2 variant parity (table2/* bench rows)")
 
-    # ---------------- H1: MoE dispatch ----------------
-    base = get("qwen2-moe-a2_7b__train_4k__single_pod.json")
-    opt = get("qwen2-moe-a2_7b__train_4k__single_pod_opt_moe_sorted.json")
-    if base and opt:
-        rb, ro = base["roofline"], opt["roofline"]
-        speed = rb["step_lower_bound_s"] / ro["step_lower_bound_s"]
-        out.append(f"""
-### H1 — qwen2-moe-a2.7b x train_4k (worst useful-FLOPs cell)
+    if "table3/bp2_speedup_model_initial" in bench:
+        add("BP=2 speeds up training ~38-40%", "Table 3 (+38.67% UniFold)",
+            f"{bench['table3/bp2_speedup_model_initial']} "
+            "(BENCH_paper.json table3/*) — the launch-bound upper bound "
+            "from branch balance + Table-2 Evoformer share; the paper's "
+            "extra few % come from its 'Other'-overlap and NCCL broadcast "
+            "being cheaper than our modeled psum; BP semantics exact on an "
+            "8-device mesh (tests)",
+            "reproduced (model)")
+    else:
+        pending.append("Table 3 BP speedup model (table3/* bench rows)")
 
-**Iteration 1 — sorted dispatch.** Hypothesis (napkin): GShard one-hot
-dispatch/combine einsums cost O(T·E·C·D) ≈ O(T²·k·cf·D/E) FLOPs per device;
-at T = 65k tokens/device that is ~9e16 FLOPs per layer pair — 200x the expert
-FFN math itself (useful ratio {rb['useful_flops_ratio']:.3f}). An
-argsort+scatter dispatch (O(T·k·D) data movement, models/moe.py:
-`sorted_dispatch`, numerically identical incl. drop pattern —
-tests/test_moe.py) should collapse the compute term.
+    if ("table5/derived_bp2_per_layer_tpu_roofline" in bench
+            and "table5/derived_dap2_per_layer_tpu_roofline" in bench):
+        add("BP beats DAP at initial-training shapes",
+            "Table 5 (+67% vs -4%)",
+            "the paper's +67% is a **GPU** launch-bound effect (the Table-3 "
+            "launch-bound model reproduces its sign); on the **TPU v5e** "
+            "bytes-roofline the same shapes price as BP "
+            f"{bench['table5/derived_bp2_per_layer_tpu_roofline']} and DAP "
+            f"{bench['table5/derived_dap2_per_layer_tpu_roofline']} "
+            "(BENCH_paper.json table5/*) — per-block exchange bytes, not "
+            "kernel-launch latency, set the trade on TPU. Hardware-dependent "
+            "conclusion, recorded as such (DESIGN.md §2)",
+            "adapted")
+    else:
+        pending.append("Table 5 BP-vs-DAP model (table5/* bench rows)")
 
-- before: {_row(base)}
-- after:  {_row(opt)}
-- **CONFIRMED**: compute {rb['compute_s']:.1f}s -> {ro['compute_s']:.2f}s
-  ({rb['compute_s']/ro['compute_s']:.0f}x), step bound {speed:.1f}x better;
-  useful-FLOPs ratio {rb['useful_flops_ratio']:.3f} -> {ro['useful_flops_ratio']:.3f}.
-  The cell is now collective-bound (the scatter/gather a2a traffic).
+    af2_ok = [r for r in af2_recs if r.get("status") == "ok"]
+    devs = sorted({r.get("devices") for r in af2_ok})
+    if af2_ok:
+        add("Hybrid BP x DAP composes", "Table 6",
+            "BP=2 x DAP=8 lowers/compiles on "
+            + "+".join(str(d) for d in devs)
+            + " chips (experiments/dryrun/af2-*.json); BP=2 x DAP=2 == "
+            "serial numerically (tests/test_parallel_equiv.py)",
+            "reproduced")
+    else:
+        pending.append("Table 6 hybrid compile proof (af2 dry-run cells)")
 
-**Iteration 2 — pin EP sharding on the expert buffer.** Hypothesis: a
-`with_sharding_constraint(xe, P('model',None,None))` forces one clean a2a
-instead of GSPMD's choice. Measured: collective bytes TRIPLED ({ro['collective_s']:.1f}s
--> 60.8s; artifact regenerated then reverted) — the constraint forced a
-resharding of BOTH the scatter output and the gather input. **REFUTED**;
-reverted (comment left at models/moe.py). Lesson: on scatter/gather-shaped
-dataflow, GSPMD's inferred sharding beat our hand-pin; constraints belong on
-stable layer boundaries, not inside dispatch.
+    if "table4/paper_reference" in bench:
+        gains = "; ".join(
+            f"{k.split('/')[1]}: {bench[k]}" for k in
+            ("table4/bp_gain_initial", "table4/bp_gain_finetune")
+            if k in bench)
+        add("End-to-end 4.18/4.88 days", "Table 4",
+            f"per-stage gains from the analytic model ({gains}; "
+            "BENCH_paper.json table4/*); wall-clock requires the real pod",
+            "model only")
+    else:
+        pending.append("Table 4 end-to-end model (table4/* bench rows)")
 
-Next (modeled, not yet measured): hierarchical two-stage dispatch (intra-node
-a2a then inter-node) to cut the remaining collective term; paper-era MegaBlocks
-grouped-GEMM kernel for ragged expert batches.""")
-
-    # ---------------- H2: decode sharding ----------------
-    b0 = get("deepseek-67b__decode_32k__single_pod.json")
-    b1 = get("deepseek-67b__decode_32k__single_pod_opt_uniform_decode.json")
-    b2 = get("deepseek-67b__decode_32k__single_pod_opt_factored_decode.json")
-    if b0 and b1 and b2:
-        out.append(f"""
-### H2 — deepseek-67b x decode_32k (most collective-bound cell)
-
-Baseline: {_row(b0)} — 4s of collectives *per decoded token*: the KV cache
-(kv=8 heads < tp=16) was head-dim-sharded, so the QK contraction lives on the
-model axis and XLA also resharded the cache around the scatter write
-('involuntary full rematerialization' warnings).
-
-**Iteration 1 — uniform-length cache write** (scalar-index
-dynamic-update-slice instead of per-sequence scatter; exact under the
-serve_step contract). Measured: {_row(b1)} — collective term barely moved.
-**REFUTED** as the root cause: the reshard came from the attention einsum's
-preferred sharding, not (only) the scatter. Kept anyway (it removes the
-scatter warnings and is strictly cheaper).
-
-**Iteration 2 — replicate the cache over the model axis.** Attention becomes
-fully local; measured on internvl2: bound 2.06s -> 0.44s, but peak HBM
-124 GB/dev (cache x16 replication) — **partial**: right collectives, wrong
-memory. Not shippable on 16 GB v5e.
-
-**Iteration 3 — 2-D factored decode mesh** (`serve.steps.decode_mesh_plan`):
-refactor model -> (kvh=gcd(kv,16)=8) x (brep=2) and push brep onto the batch
-dim: heads shard 8-way, batch 32-way, attention fully local, cache divides by
-all 256 chips.
-
-- after: {_row(b2)}
-- **CONFIRMED**: step bound {b0['roofline']['step_lower_bound_s']:.2f}s ->
-  {b2['roofline']['step_lower_bound_s']:.3f}s
-  (**{b0['roofline']['step_lower_bound_s']/b2['roofline']['step_lower_bound_s']:.0f}x**),
-  collectives {b0['roofline']['collective_s']:.2f}s -> {b2['roofline']['collective_s']:.3f}s,
-  now memory-bound on weight+cache reads — the correct physics for batched
-  decode. Remaining: serve from bf16 weights (no fp32 masters at inference)
-  to halve the remaining memory term; peak then fits 16 GB.""")
-    i0 = get("internvl2-26b__decode_32k__single_pod.json")
-    i2 = get("internvl2-26b__decode_32k__single_pod_opt_factored_decode.json")
-    if i0 and i2:
-        out.append(
-            f"\nSame change on internvl2-26b x decode_32k: bound "
-            f"{i0['roofline']['step_lower_bound_s']:.2f}s -> "
-            f"{i2['roofline']['step_lower_bound_s']:.3f}s "
-            f"({i0['roofline']['step_lower_bound_s']/i2['roofline']['step_lower_bound_s']:.0f}x).")
-
-    # ---------------- H3: AF2 (paper-representative) ----------------
-    a0 = get("af2-initial__bp2_dap8__single_pod_parallel.json")
-    a1 = get("af2-initial__bp2_dap8__single_pod_parallel_remat-none.json")
-    a2 = get("af2-initial__bp2_dap8__single_pod_parallel_lnbf16.json")
-    a3 = get("af2-initial__bp2_dap8__single_pod_parallel_remat-dots.json")
-    if a0:
-        out.append(f"""
-### H3 — AlphaFold2 initial training, BP=2 x DAP=8 x DP=16 (paper cell)
-
-Paper-faithful baseline (Parallel Evoformer + BP, fp32 params / bf16
-activations, per-block remat): {_row(a0)}.
-AF2 is **memory-bandwidth-bound** on TPU ({a0['roofline']['memory_s']:.2f}s vs
-{a0['roofline']['compute_s']:.2f}s compute — arithmetic intensity ~20 FLOP/B
-from the tiny channel dims): this is the TPU manifestation of the paper's
-'many small kernels' observation, and exactly why BP (which preserves per-op
-intensity) was the right GPU-era move.""")
-        if a1:
-            out.append(
-                f"\n**Iteration 1 — remat=none.** Hypothesis: per-block remat "
-                f"doubles activation traffic; the un-rematted trunk might "
-                f"fit. Measured: memory {a0['roofline']['memory_s']:.2f}s -> "
-                f"{a1['roofline']['memory_s']:.2f}s (WORSE — storing every "
-                f"intermediate costs more bytes than recomputing) and peak "
-                f"{a1['full']['memory']['peak_bytes_estimate']/1e9:.0f} GB/dev."
-                f" **REFUTED** — full-block remat is a bytes optimization "
-                f"here, not just a memory one.")
-        if a2:
-            out.append(
-                f"\n**Iteration 2 — bf16-io LayerNorm.** Hypothesis: AF2 is "
-                f"LN-dense; dropping the fp32 output round-trip saves one "
-                f"fp32 activation pass per LN. Measured: memory "
-                f"{a0['roofline']['memory_s']:.3f}s -> "
-                f"{a2['roofline']['memory_s']:.3f}s (-0.6%, noise). "
-                f"**REFUTED** — XLA already fuses the cast chains; LN io "
-                f"precision is free on TPU (kept fp32, the faithful choice).")
-        if a3:
-            out.append(
-                f"\n**Iteration 3 — selective remat (save matmul outputs, "
-                f"recompute pointwise).** Measured: memory "
-                f"{a3['roofline']['memory_s']:.3f}s, peak "
-                f"{a3['full']['memory']['peak_bytes_estimate']/1e9:.0f} GB/dev"
-                f" — worse on both axes than full-block remat. **REFUTED.**")
-        out.append("""
-Three consecutive <5%/negative iterations — stopping criterion met: the
-baseline (Parallel Evoformer + BP + full-block remat) is at the XLA-level
-optimum for this cell. The remaining lever is *kernel fusion below XLA*:
-the Pallas `evo_attention` kernel (kernels/flash_attention.py) fuses
-bias-add + online softmax + sigmoid gating into one VMEM-resident pass —
-eliminating ~2 HBM round-trips of the (s,r,h*c) attention tensor per block,
-a modeled ~15-20% cut of the memory term. It validates against its oracle in
-interpret mode (tests/test_kernels.py) but cannot lower in the CPU dry-run,
-so its effect is reported as modeled, not measured (DESIGN.md §6).""")
-
-    out.append(PERF_TRAILER)
+    out = [head,
+           "| Paper claim | Paper number | Our result | Verdict |",
+           "|---|---|---|---|"] + rows
+    if pending:
+        out.append("\nPending (bench/dry-run artifact missing — claim not "
+                   "asserted): " + "; ".join(pending) + ".")
     return "\n".join(out)
 
 
@@ -369,8 +645,12 @@ OPENING = """# EXPERIMENTS
 
 Paper: *Efficient AlphaFold2 Training using Parallel Evoformer and Branch
 Parallelism* (Baidu, 2022). Paper identity confirmed against the provided
-full text (DESIGN.md). All artifacts in `experiments/dryrun/*.json`; regenerate
-this file with `python scripts/make_experiments_md.py`.
+full text (DESIGN.md). Dry-run artifacts live in `experiments/dryrun/*.json`
+(`bash scripts/regen_dryrun.sh` rebuilds the full set); benchmark
+trajectories in `BENCH_{kernels,serve,train,paper}.json` (written only by a
+fully-green `python -m benchmarks.run`). Regenerate this file with
+`python scripts/make_experiments_md.py` — it refuses to write when the
+artifact set is empty, and marks any partially-missing section explicitly.
 
 Hardware model (per spec): TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
 50 GB/s/link ICI; single pod = (16,16) mesh = 256 chips; 2 pods = 512.
@@ -382,16 +662,6 @@ scanned lowering provides the compile proof, memory analysis and collective
 schedule. Collective bytes are parsed from compiled HLO operand shapes.
 """
 
-SKIPS = """
-### Skipped cells (documented, per DESIGN.md §5)
-
-`long_500k` requires sub-quadratic attention; it runs for **mamba2-2.7b** and
-**zamba2-7b** (SSM/hybrid state decode) and is skipped for the 8 pure
-full-attention archs: phi3.5-moe, qwen2-moe, glm4-9b, qwen1.5-110b,
-deepseek-67b, deepseek-coder-33b, whisper-medium, internvl2-26b.
-32 runnable + 8 skipped = 40 assigned cells.
-"""
-
 ROOFLINE_PREAMBLE = """
 Terms are **global seconds per step**: compute = HLO_FLOPs/(chips x 197e12);
 memory = HLO_bytes/(chips x 819e9); collective = coll_bytes/(chips x 50e9).
@@ -399,26 +669,6 @@ memory = HLO_bytes/(chips x 819e9); collective = coll_bytes/(chips x 50e9).
 is irreducible matmul work. `HLO/MODEL` = compiled FLOPs / analytical
 MODEL_FLOPS (6·N_active·D train, 2·N·D prefill, 2·N per token decode) —
 values >> 1 mean compiled compute is dominated by non-model work.
-"""
-
-ROOFLINE_NOTES = """
-### Reading the table — dominant bottlenecks
-
-* **Dense/MoE train cells** are memory-bound at these batch sizes (bf16
-  activations + fp32 LN casts + remat re-reads); roofline fraction 0.07-0.20.
-* **MoE train cells (baseline)** were *compute*-bound on routing garbage:
-  HLO/MODEL ≈ 100-200x from the O(T²) one-hot dispatch — fixed in §Perf H1.
-* **Decode cells** were *collective*-bound on a GSPMD cache reshard — fixed
-  in §Perf H2; after the fix they are memory-bound on weight reads, which is
-  the correct physics for batch decode.
-* **AlphaFold2** is memory-bound (tiny channels, LN-heavy): the TPU
-  manifestation of the paper's 'small kernels' observation. BP does not
-  change per-op intensity (by design); DAP=16 lowers per-device bytes but
-  pays all-gathers: the measured trade on TPU differs from the paper's
-  GPU launch-overhead argument — see §Paper-claims.
-* `whisper prefill` HLO/MODEL < 1 is an accounting artifact: the analytical
-  prefill token count uses the decoder seq_len while whisper prefill consumes
-  1500 encoder frames + 1 decoder token.
 """
 
 PERF_PREAMBLE = """
@@ -432,11 +682,11 @@ collective-bound (dense decode), most paper-representative (AF2 BP x DAP).
 PERF_TRAILER = """
 ### Stopping criteria
 
-Per the methodology, each thread stopped when the next candidate's predicted
-win on the dominant term fell under 5% or the term stopped dominating
-(verdicts above). Remaining headroom is catalogued in DESIGN.md §8 /
-README (future work): fused LN+matmul Pallas kernels for the AF2 pair stack,
-all-gather/compute overlap in the DAP triangle ops, fp8 expert GEMMs.
+Per the methodology, each completed thread stopped when the next candidate's
+predicted win on the dominant term fell under 5% or the term stopped
+dominating (verdicts above). Remaining headroom is catalogued in DESIGN.md
+§8 / README (future work): fused LN+matmul Pallas kernels for the AF2 pair
+stack, all-gather/compute overlap in the DAP triangle ops, fp8 expert GEMMs.
 """
 
 ATTENTION_IMPLS = """
@@ -451,9 +701,9 @@ Which attention implementation runs where (full matrix in ROADMAP.md
   along T (never broadcast to a full (lead, H, S, T) fp32 tensor).
 * `pallas` — LM causal-GQA flash kernel; biased non-causal self-attention
   calls route to the Evoformer kernel; `mask=` is a clear error.  Interpret
-  mode on CPU (the numbers in §Kernel-bench CSV rows named
-  `evo_attn_pallas_*` are interpret-mode correctness-harness times, not
-  speed claims); Mosaic on real TPU.
+  mode on CPU (the `evo_attn_*`/`pallas` rows in BENCH_kernels.json are
+  interpret-mode correctness-harness times, not speed claims); Mosaic on
+  real TPU.
 * `evo_pallas` — the paper hot path (Table 2: row/triangle attention is
   62-78% of Evoformer step time), fused end-to-end: one kernel does
   bias + softmax + sigmoid gate, emits per-row log-sum-exp residuals, and a
@@ -475,19 +725,6 @@ accumulation + per-slab epilogue, default; no (r, r, 2c) gated-projection
 pair, jaxpr-verified) and `pallas` (one kernel from the gated projections
 through the output gate, custom-VJP Pallas backward; interpret on CPU,
 Mosaic on TPU; `BENCH_kernels.json` rows `tri_mult_*` track all three).
-"""
-
-PAPER_CLAIMS = """
-## §Paper-claims validation
-
-| Paper claim | Paper number | Our result | Verdict |
-|---|---|---|---|
-| Parallel Evoformer == serial accuracy | Fig. 5 overlap | tiny-config training-loss trajectories overlap to 0.003% after 10 synthetic steps (bench fig5: af2 8.2056 vs parallel 8.2058) and BP is *exactly* serial math (tests/test_parallel_equiv.py) | reproduced |
-| OPM position doesn't change step cost | Table 2 (±0.5%) | FLOP-identical by construction (same modules, moved OPM); CPU step-time spread is contention noise (bench table2) | reproduced |
-| BP=2 speeds up training ~38-40% | Table 3 (+38.67% UniFold) | launch-bound upper bound from branch balance (0.602) + Table-2 share (62.4%): **+33.0%** vs paper +38.67% (bench table3) — the paper's extra ~6% comes from its 'Other'-overlap and NCCL broadcast being cheaper than our modeled psum; BP semantics exact on an 8-device mesh | reproduced (model) |
-| BP beats DAP at initial-training shapes | Table 5 (+67% vs -4%) | on **GPU** (latency/launch-bound) yes — our model reproduces the sign; on **TPU v5e** the bytes-roofline favors DAP at the same shapes because XLA fuses the small kernels and DAP cuts per-device bytes; BP's advantage on TPU appears when DAP exhausts its axis (dap > r/tile) or in hybrid BP x DAP. Recorded honestly as a hardware-dependent conclusion (DESIGN.md §2). | adapted |
-| Hybrid BP x DAP composes | Table 6 | BP=2 x DAP=8 lowers/compiles on 256+512 chips; BP=2 x DAP=2 == serial numerically (tests) | reproduced |
-| End-to-end 4.18/4.88 days | Table 4 | derived from per-stage gains (benchmarks table4); wall-clock requires the real pod | model only |
 """
 
 if __name__ == "__main__":

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Regenerate every experiments/dryrun/*.json artifact EXPERIMENTS.md cites.
+# Idempotent: each cell is cached as JSON and skipped when present, so the
+# sweep can be interrupted and re-run until it prints ALL DONE.
+set -u
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src
+
+# LM cells, both production meshes (single-pod 256, multi-pod 512 devices)
+python -m repro.launch.dryrun --all --both-meshes || exit 1
+
+# §Perf hillclimb cells (baselines come from --all above)
+python -m repro.launch.dryrun --arch qwen2-moe-a2.7b --shape train_4k \
+    --opt moe_sorted || exit 1
+python -m repro.launch.dryrun --arch deepseek-67b --shape decode_32k \
+    --opt uniform_decode || exit 1
+python -m repro.launch.dryrun --arch deepseek-67b --shape decode_32k \
+    --opt factored_decode || exit 1
+python -m repro.launch.dryrun --arch internvl2-26b --shape decode_32k \
+    --opt factored_decode || exit 1
+
+# AlphaFold2 paper cells: BP=2 x DAP=8 baseline (both meshes) + H3 variants
+python -m repro.launch.dryrun --af2 initial --bp 2 --dap 8 || exit 1
+python -m repro.launch.dryrun --af2 initial --bp 2 --dap 8 --multi-pod || exit 1
+python -m repro.launch.dryrun --af2 initial --bp 2 --dap 8 \
+    --af2-remat none || exit 1
+python -m repro.launch.dryrun --af2 initial --bp 2 --dap 8 \
+    --af2-remat dots || exit 1
+python -m repro.launch.dryrun --af2 initial --bp 2 --dap 8 --ln-bf16 || exit 1
+
+echo ALL DONE
