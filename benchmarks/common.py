@@ -20,6 +20,7 @@ KERNEL_JSON = REPO_ROOT / "BENCH_kernels.json"
 SERVE_JSON = REPO_ROOT / "BENCH_serve.json"
 TRAIN_JSON = REPO_ROOT / "BENCH_train.json"
 PAPER_JSON = REPO_ROOT / "BENCH_paper.json"
+DATA_JSON = REPO_ROOT / "BENCH_data.json"
 
 ROWS: list[tuple] = []
 # machine-readable kernel rows (op, shape, impl, ms, bytes) accumulated by
@@ -34,6 +35,12 @@ SERVE_ROWS: list[dict] = []
 # accumulated by train_bench and written to BENCH_train.json by run.py under
 # the same only-green gating
 TRAIN_ROWS: list[dict] = []
+# input-pipeline rows (scenario, workers, per-stage ms/step, stall fraction)
+# accumulated by data_bench and written to BENCH_data.json by run.py under
+# the same only-green gating — the streaming-ingest trajectory (DESIGN.md
+# §13): worker overlap must keep input stall strictly below the inline
+# baseline, and --compare pins the stall fraction against regressions
+DATA_ROWS: list[dict] = []
 
 
 def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -99,6 +106,20 @@ def emit_train(scenario: str, row: dict):
 
 def write_train_json(path=TRAIN_JSON) -> None:
     rows = sorted(TRAIN_ROWS, key=lambda r: r["scenario"])
+    path.write_text(json.dumps(rows, indent=1) + "\n")
+
+
+def emit_data(scenario: str, row: dict):
+    """One input-pipeline row: CSV echo + a structured BENCH_data.json row."""
+    DATA_ROWS.append(dict(scenario=scenario, **row))
+    emit(f"data/{scenario}", row.get("stall_ms_per_step", 0.0) * 1e3,
+         f"stall_fraction={row.get('stall_fraction', 0):.4f};"
+         f"workers={row.get('workers', 0)};"
+         f"fill={row.get('mean_fill', 1.0):.2f}")
+
+
+def write_data_json(path=DATA_JSON) -> None:
+    rows = sorted(DATA_ROWS, key=lambda r: r["scenario"])
     path.write_text(json.dumps(rows, indent=1) + "\n")
 
 

@@ -1,0 +1,152 @@
+"""Input-pipeline benchmarks: DataPipeline per-stage accounting + the
+worker-overlap stall gate (DESIGN.md §13).
+
+ParaFold/ScaleFold's finding is that AF2 wall-clock hides in the HOST input
+path, so this suite measures the pipeline alone against a fixed simulated
+step (``sleep(STEP_S)`` — a stand-in accelerator step that, like a real
+dispatched device step, does not hold the GIL, so host featurize threads
+can overlap it even on one core).  Per scenario it reports the
+:class:`repro.data.pipeline.StageReport` breakdown (featurize / queue /
+transfer / stall ms per step, stall fraction, batch fill).
+
+Scenario grid (workers x bucketing x source — the BENCH_data.json rows):
+
+* ``compat``   — source=None: the historic synthetic ``protein_batch``
+  stream behind the pipeline interface.
+* ``records``  — ``SyntheticSource(vary_length=True)`` through the record
+  path (``featurize_record`` + pad), unbucketed schedule.
+* ``bucketed`` — same records with the length-bucketed shuffle (similar
+  lengths ride together; ``mean_fill`` rises vs ``records``).
+* ``fasta``    — the FASTA ingest path over the bundled demo records.
+
+Each scenario runs workers=0 (inline featurize in the consumer loop — no
+overlap, the baseline) and workers=2.  **The gate**: overlapped workers
+must keep input stall strictly below the inline baseline for every
+scenario — if threading ever stops hiding featurize time behind the step,
+the suite fails and the committed BENCH_data.json is left untouched.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit_data
+
+STEPS = 24          # measured steps per scenario
+STEP_S = 0.012      # simulated accelerator step (sleep releases the GIL)
+
+
+def _cfg():
+    from repro.core.config import af2_tiny
+    return af2_tiny(n_evoformer=1, n_extra_msa_blocks=1, n_res=16, n_seq=6,
+                    n_extra_seq=8)
+
+
+def _sources(cfg):
+    from repro.data.ingest import FastaSource, SyntheticSource, demo_fasta
+    return {
+        "compat": (None, False),
+        "records": (SyntheticSource(cfg, seed=0, n_records=24,
+                                    vary_length=True), False),
+        "bucketed": (SyntheticSource(cfg, seed=0, n_records=24,
+                                     vary_length=True), True),
+        "fasta": (FastaSource(demo_fasta(cfg, n_records=12, seed=0), cfg,
+                              is_path=False), False),
+    }
+
+
+def _run_pipeline(cfg, source, bucket_by_length, workers) -> dict:
+    import jax
+    from repro.data.bucketing import train_bucket
+    from repro.data.pipeline import DataPipeline
+    sharding = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    pipe = DataPipeline(
+        cfg, source=source, batch_size=2, seed=0, workers=workers,
+        bucket_by_length=bucket_by_length,
+        pad_to=train_bucket(cfg) if source is not None else None,
+        sharding=sharding)
+    try:
+        for step, batch in pipe:
+            jax.block_until_ready(batch)      # transfer really done
+            time.sleep(STEP_S)                # the simulated step
+            if step >= STEPS - 1:
+                break
+    finally:
+        report = pipe.report
+        pipe.close()
+    return report.as_dict()
+
+
+def data_pipeline_stall():
+    """The full grid + the overlap gate; rows land in BENCH_data.json."""
+    cfg = _cfg()
+    baselines: dict = {}
+    for name, (source, bucketed) in _sources(cfg).items():
+        for workers in (0, 2):
+            d = _run_pipeline(cfg, source, bucketed, workers)
+            row = {
+                "workers": workers,
+                "source": ("synthetic" if source is None else
+                           type(source).__name__),
+                "bucket_by_length": bucketed,
+                "batch": 2,
+                "steps": d["steps"],
+                "featurize_ms_per_step": d["featurize_ms_per_step"],
+                "queue_ms_per_step": d["queue_ms_per_step"],
+                "transfer_ms_per_step": d["transfer_ms_per_step"],
+                "stall_ms_per_step": d["stall_ms_per_step"],
+                "stall_fraction": d["stall_fraction"],
+                "mean_fill": d["mean_fill"],
+                "buckets": d["buckets"],
+            }
+            emit_data(f"{name}_w{workers}", row)
+            if workers == 0:
+                baselines[name] = d["stall_ms_per_step"]
+            elif not d["stall_ms_per_step"] < baselines[name]:
+                # the tentpole's whole point: overlapped workers must beat
+                # the inline baseline, strictly, on every scenario
+                raise AssertionError(
+                    f"input-stall gate: {name} workers={workers} stalled "
+                    f"{d['stall_ms_per_step']}ms/step, not strictly below "
+                    f"the inline baseline {baselines[name]}ms/step")
+
+
+def data_determinism_overhead():
+    """Worker-count invariance is free: the w0 and w2 streams of the same
+    (seed, step) schedule are bit-identical (checked here on real batches,
+    not just hashes) — the determinism contract costs no accuracy knob."""
+    cfg = _cfg()
+    from repro.data.ingest import SyntheticSource
+    from repro.data.bucketing import train_bucket
+    from repro.data.pipeline import DataPipeline
+
+    def collect(workers):
+        src = SyntheticSource(cfg, seed=0, n_records=24, vary_length=True)
+        pipe = DataPipeline(cfg, source=src, batch_size=2, seed=0,
+                            workers=workers, bucket_by_length=True,
+                            pad_to=train_bucket(cfg))
+        out = []
+        t0 = time.perf_counter()
+        for step, batch in pipe:
+            out.append(batch)
+            if step >= 7:
+                break
+        dt = time.perf_counter() - t0
+        pipe.close()
+        return out, dt
+
+    a, dt0 = collect(0)
+    b, dt2 = collect(2)
+    for x, y in zip(a, b):
+        assert sorted(x) == sorted(y)
+        for k in x:
+            np.testing.assert_array_equal(np.asarray(x[k]), np.asarray(y[k]))
+    emit_data("determinism_w0_vs_w2", {
+        "workers": 2, "source": "SyntheticSource", "bucket_by_length": True,
+        "batch": 2, "steps": 8, "bit_identical": True,
+        "inline_s": round(dt0, 4), "overlapped_s": round(dt2, 4),
+    })
+
+
+ALL = [data_pipeline_stall, data_determinism_overhead]

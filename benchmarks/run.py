@@ -21,6 +21,26 @@ def compare_kernel_rows(baseline: list, fresh: list, tol: float = 0.10):
     return out
 
 
+def compare_data_rows(baseline: list, fresh: list, tol: float = 0.10,
+                      floor: float = 0.02):
+    """Regressions of committed BENCH_data.json input-stall fractions.
+
+    A scenario regresses when its fresh ``stall_fraction`` exceeds the
+    committed one by more than ``tol`` relative AND ``floor`` absolute —
+    the absolute floor keeps near-zero overlapped stalls (where 10% is
+    sub-millisecond timing noise) from flapping the gate."""
+    old = {r["scenario"]: r.get("stall_fraction") for r in baseline}
+    out = []
+    for r in fresh:
+        prev = old.get(r["scenario"])
+        cur = r.get("stall_fraction")
+        if prev is None or cur is None:
+            continue
+        if cur > prev * (1 + tol) and cur - prev > floor:
+            out.append((r["scenario"], prev, cur))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="Run benchmark suites; positional names filter suites.")
@@ -35,15 +55,19 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     from benchmarks import paper_tables, kernel_bench, fold_bench, train_bench
+    from benchmarks import data_bench
     from benchmarks import common
     suites = (paper_tables.ALL + kernel_bench.ALL + fold_bench.ALL
-              + train_bench.ALL)
+              + train_bench.ALL + data_bench.ALL)
     if args.suites:
         wanted = set(args.suites)
         suites = [f for f in suites if f.__name__ in wanted]
     baseline = []
     if args.compare and common.KERNEL_JSON.exists():
         baseline = json.loads(common.KERNEL_JSON.read_text())
+    data_baseline = []
+    if args.compare and common.DATA_JSON.exists():
+        data_baseline = json.loads(common.DATA_JSON.read_text())
     failed = []
     for fn in suites:
         try:
@@ -65,6 +89,18 @@ def main() -> None:
         print(f"# compare: {len(common.KERNEL_ROWS)} fresh rows vs "
               f"{len(baseline)} committed, no >10% regressions",
               file=sys.stderr)
+    if args.compare and not failed:
+        data_reg = compare_data_rows(data_baseline, common.DATA_ROWS)
+        if data_reg:
+            for scenario, old_f, new_f in data_reg:
+                print(f"# REGRESSION data/{scenario}: stall_fraction "
+                      f"{old_f} -> {new_f}", file=sys.stderr)
+            raise SystemExit(
+                f"{len(data_reg)} data-pipeline row(s) regressed >10% vs "
+                "the committed trajectory; BENCH_data.json left untouched")
+        print(f"# compare: {len(common.DATA_ROWS)} fresh data rows vs "
+              f"{len(data_baseline)} committed, no stall regressions",
+              file=sys.stderr)
     if common.KERNEL_ROWS and not failed:
         # only a fully-green run may overwrite the committed trajectories —
         # a partial row set would read as kernels regressing out of existence
@@ -81,6 +117,11 @@ def main() -> None:
         common.write_train_json()
         print(f"# wrote {len(common.TRAIN_ROWS)} rows to "
               f"{common.TRAIN_JSON}", file=sys.stderr)
+    if common.DATA_ROWS and not failed:
+        # same only-green gating for the input-pipeline trajectory
+        common.write_data_json()
+        print(f"# wrote {len(common.DATA_ROWS)} rows to "
+              f"{common.DATA_JSON}", file=sys.stderr)
     if common.paper_rows() and not failed:
         # same only-green gating for the paper-table rows EXPERIMENTS.md
         # §Paper-claims cites

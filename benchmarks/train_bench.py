@@ -12,6 +12,10 @@ benchmarks/run.py):
 * ``train_tiny_lddt`` — the accuracy half of the paper's claim, in
   miniature: loss + EMA-eval lDDT-Cα before and after a short run, the
   trajectory the full-scale reproduction reports per ParallelPlan.
+* ``train_tiny_pipeline_parity`` — the DESIGN.md §13 contract on the real
+  loop: the streaming DataPipeline (worker featurize + device-put
+  lookahead) must produce the bit-identical loss trajectory of the inline
+  path at no worse steps/s, with the input-stall breakdown recorded.
 """
 from __future__ import annotations
 
@@ -74,4 +78,33 @@ def train_tiny_lddt():
     })
 
 
-ALL = [train_tiny_throughput, train_tiny_lddt]
+def train_tiny_pipeline_parity():
+    def timed(workers):
+        r = _runner(data_workers=workers)
+        r.run(1)                           # compile outside the timed region
+        t0 = time.perf_counter()
+        hist = r.run(5)
+        return r, hist, time.perf_counter() - t0
+
+    r0, h0, dt0 = timed(0)
+    r1, h1, dt1 = timed(1)
+    assert h0["loss"] == h1["loss"], (
+        "DataPipeline worker path changed the loss trajectory: "
+        f"{h0['loss']} vs {h1['loss']}")
+    steps = len(h1["loss"]) - 1
+    d = h1["data"][-1]
+    emit_train("train_tiny_pipeline_parity", {
+        "steps": steps,
+        "batch": r1.batch_size,
+        "losses_bit_identical": True,
+        "compiles": r1.train_compiles,
+        "mean_step_ms": round(1e3 * dt1 / steps, 2),
+        "steps_per_s": round(steps / dt1, 4),
+        "inline_steps_per_s": round(steps / dt0, 4),
+        "stall_ms_per_step": d["stall_ms_per_step"],
+        "stall_fraction": d["stall_fraction"],
+        "transfer_ms_per_step": d["transfer_ms_per_step"],
+    })
+
+
+ALL = [train_tiny_throughput, train_tiny_lddt, train_tiny_pipeline_parity]

@@ -39,6 +39,17 @@ ap.add_argument("--eval-every", type=int, default=0,
 ap.add_argument("--ema", type=float, default=0.999,
                 help="EMA decay for eval params (0 disables)")
 ap.add_argument("--seed", type=int, default=0)
+ap.add_argument("--data-workers", type=int, default=1,
+                help="host featurize worker threads (0 = inline, no overlap)")
+ap.add_argument("--data-source", default="synthetic",
+                choices=["synthetic", "fasta"],
+                help="input source: deterministic synthetic stream or the "
+                     "FASTA record-ingest path")
+ap.add_argument("--fasta", default="",
+                help="FASTA file for --data-source fasta (empty = bundled "
+                     "demo records)")
+ap.add_argument("--bucket-by-length", action="store_true",
+                help="length-bucketed shuffle (record sources only)")
 args = ap.parse_args()
 
 if args.devices:
@@ -60,7 +71,13 @@ if args.eval_every:
     sys.argv += ["--eval-every", str(args.eval_every)]
 if args.max_recycle:
     sys.argv += ["--max-recycle", str(args.max_recycle)]
-sys.argv += ["--ema", str(args.ema), "--seed", str(args.seed)]
+if args.fasta:
+    sys.argv += ["--fasta", args.fasta]
+if args.bucket_by_length:
+    sys.argv += ["--bucket-by-length"]
+sys.argv += ["--ema", str(args.ema), "--seed", str(args.seed),
+             "--data-workers", str(args.data_workers),
+             "--data-source", args.data_source]
 
 from repro.launch.train import main  # noqa: E402
 

@@ -65,3 +65,11 @@ REPRO_FORCE_OVERLAP_DAP=1 python -m pytest -x -q \
 # ./scripts/run_tier1.sh -m serve_load
 echo "== tier-1g: load-scheduling tier (continuous batching, fake clock) =="
 python -m pytest -x -q -m serve_load
+
+# tier-1h: the streaming input-pipeline tier (marker: data) — ingest parsing
+# (FASTA/mmCIF-lite), bucket-schedule determinism, DataPipeline worker-count
+# bit-identity + resume + close/re-iterate, ShardedLoader/HostWorkerPool
+# failure propagation (the silent-hang fix).  Also in the main pass;
+# standalone for data-layer changes: ./scripts/run_tier1.sh -m data
+echo "== tier-1h: input-pipeline tier (ingest / bucketing / DataPipeline) =="
+python -m pytest -x -q -m data

@@ -20,15 +20,18 @@ Two pieces:
   (their step time is short, so the model stage drains them faster), large
   buckets shallower (each item pins more host memory and the step gives the
   pool more slack).  Depth scales inversely with bucket residue count.
+
+The worker-pool mechanics (backlog, bounded in-flight, exception-carrying
+ready queue) are ``data.pipeline.HostWorkerPool`` — ONE host-stage substrate
+shared with the training ingest pipeline (DESIGN.md §13), parameterized here
+by the bucket-depth cap.  A featurize exception therefore reaches ``poll``'s
+caller instead of stranding the scheduler on an empty queue.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-import queue
-import threading
 import time
-from collections import deque
 from typing import Optional
 
 import numpy as np
@@ -84,21 +87,19 @@ class FeaturizePipeline:
 
     def __init__(self, buckets, *, workers: int = 0, depth_base: int = 4,
                  depth_min: int = 2, depth_max: int = 16):
+        from repro.data.pipeline import HostWorkerPool
         self.buckets = sorted(buckets)
         self.workers = workers
         self.depth_base = depth_base
         self.depth_min = depth_min
         self.depth_max = depth_max
-        self.stats = {"featurized": 0, "featurize_s": 0.0, "max_inflight": 0}
-        self._ready: "queue.Queue[Featurized]" = queue.Queue()
-        self._backlog = deque()           # requests not yet handed to a worker
-        self._inflight = 0
-        self._lock = threading.Lock()
-        self._pool = None
-        if workers > 0:
-            from concurrent.futures import ThreadPoolExecutor
-            self._pool = ThreadPoolExecutor(
-                max_workers=workers, thread_name_prefix="featurize")
+        # the cap is the depth of the SMALLEST bucket with backlog — a cheap
+        # global bound that still lets short-protein bursts prefetch deeper
+        # than long-protein ones
+        self._pool = HostWorkerPool(
+            self._featurize, workers=workers, name="featurize",
+            cap=lambda req: self.depth_for(
+                fs.bucket_for(self.buckets, req.features)))
 
     # -- depth policy --------------------------------------------------------
 
@@ -118,71 +119,30 @@ class FeaturizePipeline:
         padded = fs.pad_to_bucket(request.features, bucket)
         digest = feature_digest(request.features)
         dt = time.perf_counter() - t0
-        with self._lock:
-            self.stats["featurized"] += 1
-            self.stats["featurize_s"] += dt
         return Featurized(request=request, bucket=bucket, padded=padded,
                           digest=digest, featurize_s=dt)
 
-    def _worker(self, request):
-        try:
-            self._ready.put(self._featurize(request))
-        finally:
-            with self._lock:
-                self._inflight -= 1
-            self._pump()
-
-    def _pump(self):
-        """Hand backlog items to the pool up to the bucket-aware depth.
-
-        The cap is the depth of the SMALLEST bucket with backlog — a cheap
-        global bound that still lets short-protein bursts prefetch deeper
-        than long-protein ones.
-        """
-        while True:
-            with self._lock:
-                if not self._backlog:
-                    return
-                head = self._backlog[0]
-                cap = self.depth_for(
-                    fs.bucket_for(self.buckets, head.features))
-                if self._inflight >= cap:
-                    return
-                self._backlog.popleft()
-                self._inflight += 1
-                self.stats["max_inflight"] = max(
-                    self.stats["max_inflight"], self._inflight)
-            self._pool.submit(self._worker, head)
+    @property
+    def stats(self) -> dict:
+        """The historical stat keys, mapped from the shared pool's ledger."""
+        ps = self._pool.stats
+        return {"featurized": ps["done"], "featurize_s": ps["busy_s"],
+                "max_inflight": ps["max_inflight"]}
 
     def submit(self, request) -> None:
-        if self._pool is None:
-            self._ready.put(self._featurize(request))
-            return
-        with self._lock:
-            self._backlog.append(request)
-        self._pump()
+        self._pool.submit(request)
 
     def poll(self, block: bool = False,
              timeout: Optional[float] = None) -> list:
         """Drain finished items.  ``block=True`` waits for at least one
-        (returns [] only on timeout or an empty, idle pipeline)."""
-        out = []
-        if block and self._ready.empty() and self.pending:
-            try:
-                out.append(self._ready.get(timeout=timeout or 30.0))
-            except queue.Empty:
-                return out
-        while True:
-            try:
-                out.append(self._ready.get_nowait())
-            except queue.Empty:
-                return out
+        (returns [] only on timeout or an empty, idle pipeline).  A worker
+        exception is re-raised here, on the scheduler's thread."""
+        return self._pool.poll(block=block, timeout=timeout,
+                               raise_failures=True)
 
     @property
     def pending(self) -> int:
-        with self._lock:
-            return self._inflight + len(self._backlog)
+        return self._pool.pending
 
     def close(self):
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
+        self._pool.close()

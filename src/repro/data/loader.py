@@ -4,6 +4,10 @@ Deterministic batch synthesis (protein or token) per (seed, step); each host
 produces only its shard and the loader prefetches the next batch on a worker
 thread while the current step runs — the standard input-pipeline overlap.
 
+A ``make_batch`` exception on the worker is carried to the consumer and
+re-raised from the iterator (a dying worker must never leave ``q.get()``
+blocked forever).
+
 Lifecycle: one iteration at a time.  ``__iter__`` while a previous iteration
 is live raises; ``close()`` is idempotent and returns the loader to a fresh
 state, so ``iter -> close -> iter`` works (each iteration restarts at
@@ -15,6 +19,13 @@ from __future__ import annotations
 import queue
 import threading
 from typing import Callable, Iterator, Optional
+
+
+class _WorkerFailure:
+    """Exception captured on the worker thread, re-raised by the consumer."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
 
 
 class ShardedLoader:
@@ -29,13 +40,21 @@ class ShardedLoader:
 
     def _worker(self, q: queue.Queue, stop: threading.Event, step: int):
         while not stop.is_set():
-            batch = self._make_batch(step)
+            try:
+                batch = self._make_batch(step)
+            except BaseException as e:  # noqa: BLE001 — re-raised by consumer
+                # a worker exception must reach the consuming iterator: a
+                # dying thread would otherwise leave q.get() blocked forever
+                # (the silent-hang failure mode this guards against)
+                batch = _WorkerFailure(e)
             while not stop.is_set():
                 try:
                     q.put((step, batch), timeout=0.1)
                     break
                 except queue.Full:
                     continue
+            if isinstance(batch, _WorkerFailure):
+                return      # the stream is over; consumer re-raises
             step += 1
 
     def __iter__(self) -> Iterator:
@@ -53,7 +72,12 @@ class ShardedLoader:
         thread.start()
         try:
             while True:
-                yield q.get()
+                step, batch = q.get()
+                if isinstance(batch, _WorkerFailure):
+                    raise RuntimeError(
+                        f"ShardedLoader worker failed at step {step} "
+                        f"(make_batch raised)") from batch.exc
+                yield step, batch
         finally:
             # close THIS iteration's resources only: a generator finalized
             # late (GC) must not tear down a newer iteration

@@ -91,7 +91,26 @@ def main():
                     help="AF2: EMA decay for eval params (0 disables)")
     ap.add_argument("--eval-every", type=int, default=0,
                     help="AF2: lDDT-Cα eval cadence on the held-out split "
-                         "(0 disables)")
+                         "(0 disables); also logs the input pipeline's "
+                         "per-stage stall report at the same cadence")
+    ap.add_argument("--data-workers", type=int, default=1,
+                    help="AF2: host featurize worker threads (0 = inline "
+                         "featurization in the train loop, no overlap)")
+    ap.add_argument("--data-source", choices=["synthetic", "fasta"],
+                    default="synthetic",
+                    help="AF2: input source — 'synthetic' is the historic "
+                         "deterministic protein_batch stream; 'fasta' runs "
+                         "the record-ingest path (parse + MSA stack + "
+                         "featurize_record) over --fasta or a bundled demo "
+                         "set")
+    ap.add_argument("--fasta", default="",
+                    help="AF2: FASTA file for --data-source fasta (empty = "
+                         "deterministic demo records)")
+    ap.add_argument("--bucket-by-length", action="store_true",
+                    help="AF2: group records of similar length per batch "
+                         "(record sources only; batches still pad to the "
+                         "config's terminal bucket so the compiled step "
+                         "keeps one shape)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -144,6 +163,20 @@ def run_af2(args, jax, jnp, np):
             variant=args.variant, overlap_dap=overlap,
             compress_pod_grads=args.compress_pod_grads)
 
+    source = None
+    if args.data_source == "fasta":
+        from repro.data.ingest import FastaSource, demo_fasta
+        if args.fasta:
+            source = FastaSource(args.fasta, cfg, is_path=True)
+        else:
+            source = FastaSource(demo_fasta(cfg, seed=args.seed), cfg,
+                                 is_path=False)
+        print(f"data: fasta source, {len(source)} records"
+              + (f" from {args.fasta}" if args.fasta else " (bundled demo)"))
+    if args.bucket_by_length and source is None:
+        raise SystemExit("--bucket-by-length needs --data-source fasta "
+                         "(the synthetic stream is fixed-shape)")
+
     # paper §5.2 / AF2 suppl. 1.11.3: clip each SAMPLE's gradient at 0.1
     opt = adamw(af2_lr_schedule(args.lr, warmup_steps=100),
                 per_sample_clip=0.1)
@@ -154,6 +187,8 @@ def run_af2(args, jax, jnp, np):
         ema_decay=args.ema or None, eval_every=args.eval_every,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
         install_sigterm=True, deterministic=False,
+        data_source=source, data_workers=args.data_workers,
+        bucket_by_length=args.bucket_by_length,
         on_straggler=lambda s, dt, ema: print(
             f"  [watchdog] step {s} took {dt:.2f}s (EMA {ema:.2f}s)"))
     n_params = sum(x.size for x in
@@ -175,6 +210,14 @@ def run_af2(args, jax, jnp, np):
           f"train compiles: {runner.train_compiles}; stragglers flagged: "
           f"{len(runner.watchdog.flagged)}"
           + (f"; final lDDT-Cα {evals[-1]['lddt_ca']:.2f}" if evals else ""))
+    data = runner.history["data"]
+    if data:
+        d = data[-1]
+        print(f"data ({args.data_workers} workers): stall "
+              f"{d['stall_ms_per_step']}ms/step "
+              f"({100 * d['stall_fraction']:.1f}% of loop), featurize "
+              f"{d['featurize_ms_per_step']}ms, transfer "
+              f"{d['transfer_ms_per_step']}ms, fill {d['mean_fill']:.2f}")
 
 
 def run_lm(args, jax, jnp, np):

@@ -26,9 +26,16 @@ loss-goes-down + lDDT-goes-up trajectory for every ParallelPlan:
    Eval runs the serial single-device path (block_fn=None): it is rare,
    forward-only, and must not depend on the training layout.
 
-Input pipeline overlap comes from ``ShardedLoader`` (next batch synthesized
-on a worker thread while the step runs — ScaleFold's observation that the
-loop, not the kernels, hides AF2 wall-clock once fusion is done).
+Input pipeline overlap comes from ``data.pipeline.DataPipeline`` (DESIGN.md
+§13): the next batches are featurized on ``data_workers`` host threads while
+the step runs, and each batch is ``jax.device_put`` onto the plan's sharding
+one step ahead of consumption — ScaleFold's observation that the loop, not
+the kernels, hides AF2 wall-clock once fusion is done.  ``data_source=None``
+keeps the deterministic synthetic stream (bit-identical to the historical
+``ShardedLoader`` path); an ``data.ingest`` source switches to record
+featurization with an optional length-bucketed shuffle.  Per-stage input
+accounting (featurize/queue/transfer/stall) lands in ``history["data"]``
+and is logged alongside eval.
 """
 from __future__ import annotations
 
@@ -56,7 +63,8 @@ class TrainRunner:
                  ckpt_dir: str = "", ckpt_every: int = 50, keep: int = 3,
                  install_sigterm: bool = False,
                  deterministic: bool = False, devices=None,
-                 on_straggler=None):
+                 on_straggler=None, data_source=None, data_workers: int = 1,
+                 data_prefetch: int = 2, bucket_by_length: bool = False):
         import jax
         from repro.core import model as af2
         from repro.parallel.plan import BuiltPlan, ParallelPlan
@@ -86,6 +94,10 @@ class TrainRunner:
         self.eval_n_recycle = eval_n_recycle or self.max_recycle
         self.ckpt_every = ckpt_every
         self.devices = devices
+        self.data_source = data_source
+        self.data_workers = data_workers
+        self.data_prefetch = data_prefetch
+        self.bucket_by_length = bucket_by_length
         self.optimizer = optimizer or optim_lib.adamw(
             optim_lib.af2_lr_schedule(1e-3, warmup_steps=100),
             per_sample_clip=0.1)
@@ -124,7 +136,8 @@ class TrainRunner:
                                       plan_meta=built.metadata())
                     if ckpt_dir else None)
         self.watchdog = StepWatchdog(on_straggler=on_straggler)
-        self.history = {"loss": [], "n_recycle": [], "step_s": [], "eval": []}
+        self.history = {"loss": [], "n_recycle": [], "step_s": [], "eval": [],
+                        "data": []}
 
     # -- compile accounting (the FoldEngine contract, training-side) --------
 
@@ -241,6 +254,31 @@ class TrainRunner:
             self.state, adapt_plan=adapt_plan)
         return self.step
 
+    # -- the input pipeline --------------------------------------------------
+
+    def make_pipeline(self):
+        """The streaming input pipeline for this runner (DESIGN.md §13).
+
+        ``data_source=None`` keeps the synthetic ``protein_batch`` stream
+        (byte-identical to every prior release); a record source switches to
+        ``featurize_record`` + bucket scheduling, padded onto the config's
+        single terminal train bucket so the compiled step keeps ONE shape
+        even when ``bucket_by_length`` groups similar lengths per batch.
+        Batches are device_put onto the built plan's (mesh, batch_spec)
+        sharding one step ahead of consumption.
+        """
+        from jax.sharding import NamedSharding
+        from repro.data.bucketing import train_bucket
+        from repro.data.pipeline import DataPipeline
+        return DataPipeline(
+            self.cfg, source=self.data_source, batch_size=self.batch_size,
+            seed=self.seed, start_step=self.step, workers=self.data_workers,
+            prefetch=self.data_prefetch,
+            bucket_by_length=self.bucket_by_length,
+            pad_to=(train_bucket(self.cfg) if self.data_source is not None
+                    else None),
+            sharding=NamedSharding(self.built.mesh, self.built.batch_spec))
+
     # -- the loop ------------------------------------------------------------
 
     def run(self, steps: int, *, log_every: int = 0, log=print) -> dict:
@@ -248,19 +286,16 @@ class TrainRunner:
 
         Per step: draw n_recycle on host -> one compiled step (loss, grads,
         optimizer, EMA) -> history.  Every ``eval_every`` steps: lDDT-Cα
-        with the EMA params on the held-out split, logged with throughput.
-        Returns ``self.history``.
+        with the EMA params on the held-out split, logged with throughput
+        and the input pipeline's per-stage stall report.  Returns
+        ``self.history`` (input accounting under ``history["data"]``).
         """
         import jax
-        from repro.data.protein import protein_batch
-        from repro.data.loader import ShardedLoader
 
-        loader = ShardedLoader(
-            lambda s: protein_batch(self.seed, s, self.batch_size, self.cfg),
-            start_step=self.step)
+        pipeline = self.make_pipeline()
         base_rng = jax.random.PRNGKey(self.seed)
         try:
-            for step, batch in loader:
+            for step, batch in pipeline:
                 if step >= steps:
                     break
                 nr = self.recycle_draw(step)
@@ -284,16 +319,21 @@ class TrainRunner:
                     ev = self.evaluate()
                     self.history["eval"].append(
                         {"step": self.step, "lddt_ca": ev["lddt_ca"]})
+                    self.history["data"].append(
+                        dict(pipeline.report.as_dict(), step=self.step))
                     if log_every:
                         log(f"  eval @ {self.step}: lDDT-Cα "
                             f"{ev['lddt_ca']:.2f} (ema={self.ema is not None},"
                             f" {self.batch_size / max(dt, 1e-9):.2f}"
                             f" protein/s)")
+                        log(f"  {pipeline.report.describe()}")
                 if (self.mgr and self.step % self.ckpt_every == 0
                         and self.step < steps):
                     self.mgr.save(self.step, self.state)
         finally:
-            loader.close()
+            self.history["data"].append(
+                dict(pipeline.report.as_dict(), step=self.step))
+            pipeline.close()
         if self.mgr:
             self.mgr.save(self.step, self.state)
             self.mgr.wait()

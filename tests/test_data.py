@@ -1,11 +1,14 @@
 """Data pipeline: determinism, host sharding, loader prefetch."""
 import jax
 import numpy as np
+import pytest
 
 from repro.core.config import af2_tiny
 from repro.data.loader import ShardedLoader
 from repro.data.protein import protein_batch, protein_sample
 from repro.data.tokens import token_batch
+
+pytestmark = pytest.mark.data
 
 
 def test_protein_sample_deterministic_and_valid():

@@ -1,0 +1,343 @@
+"""Streaming ingest pipeline (DESIGN.md §13): source parsing, bucket
+schedule, worker-count determinism, failure propagation, resume.
+
+The load-bearing contract: the consumed stream is a pure function of
+(seed, step) — worker count, thread scheduling, close/re-iterate and
+resume-at-step-k must all be invisible in the values.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.config import af2_tiny
+from repro.data import bucketing as bk
+from repro.data.ingest import (
+    FastaSource, GAP_ID, ProteinRecord, SyntheticSource, aa_ids, demo_fasta,
+    featurize_record, parse_fasta, parse_mmcif_lite, synthesize_msa)
+from repro.data.loader import ShardedLoader
+from repro.data.pipeline import (
+    DataPipeline, HostWorkerPool, TRAIN_BATCH_KEYS, WorkerFailure)
+
+pytestmark = pytest.mark.data
+
+
+def tiny_cfg(n_res=12, n_seq=4, n_extra_seq=6):
+    return af2_tiny(n_evoformer=1, n_extra_msa_blocks=1, n_res=n_res,
+                    n_seq=n_seq, n_extra_seq=n_extra_seq)
+
+
+# ---------------------------------------------------------------------------
+# ingest: parsers + featurize_record
+# ---------------------------------------------------------------------------
+
+def test_parse_fasta_multirecord_whitespace():
+    text = ">a desc\nACDE\nFGH\n\n>b\n  MKV  \n"
+    recs = parse_fasta(text)
+    assert recs == [("a desc", "ACDEFGH"), ("b", "MKV")]
+    with pytest.raises(ValueError):
+        parse_fasta("ACDE\n>late header\n")
+
+
+MMCIF_LITE = """\
+data_demo
+loop_
+_atom_site.group_PDB
+_atom_site.label_atom_id
+_atom_site.label_comp_id
+_atom_site.label_seq_id
+_atom_site.Cartn_x
+_atom_site.Cartn_y
+_atom_site.Cartn_z
+ATOM N   MET 1 0.0 0.0 0.0
+ATOM CA  MET 1 1.0 2.0 3.0
+ATOM CA  ALA 2 4.8 2.0 3.0
+HETATM CA  HOH 3 9.9 9.9 9.9
+ATOM CA  GLY 4 8.6 2.0 3.0
+#
+"""
+
+
+def test_parse_mmcif_lite_ca_trace():
+    seq, coords = parse_mmcif_lite(MMCIF_LITE)
+    assert seq == "MAG"                       # HETATM water skipped
+    np.testing.assert_allclose(coords[0], [1.0, 2.0, 3.0])
+    assert coords.shape == (3, 3) and coords.dtype == np.float32
+    with pytest.raises(ValueError):
+        parse_mmcif_lite("data_x\nloop_\n_foo.bar\n1\n")
+
+
+def test_featurize_record_shapes_and_determinism():
+    cfg = tiny_cfg()
+    seq = "ACDEFGHIK"
+    rec = ProteinRecord(name="r", seq=seq,
+                        msa=synthesize_msa(seq, 3,
+                                           np.random.default_rng(0)))
+    a = featurize_record(rec, cfg, seed=5, step=7, idx=1)
+    b = featurize_record(rec, cfg, seed=5, step=7, idx=1)
+    assert sorted(a) == sorted(TRAIN_BATCH_KEYS)
+    r = len(seq)
+    assert a["msa_feat"].shape == (cfg.n_seq, r, cfg.msa_feat_dim)
+    assert a["extra_msa_feat"].shape == (cfg.n_extra_seq, r, cfg.msa_feat_dim)
+    assert a["target_feat"].shape == (r, cfg.target_feat_dim)
+    assert a["true_rots"].shape == (r, 3, 3)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    # different (step, idx) -> different mask draw, same truth
+    c = featurize_record(rec, cfg, seed=5, step=8, idx=1)
+    assert not np.array_equal(a["msa_mask_positions"],
+                              c["msa_mask_positions"])
+    np.testing.assert_array_equal(a["true_msa"], c["true_msa"])
+    # frames orthonormal
+    rr = np.einsum("rij,rik->rjk", a["true_rots"], a["true_rots"])
+    np.testing.assert_allclose(rr, np.broadcast_to(np.eye(3), rr.shape),
+                               atol=1e-4)
+
+
+def test_fasta_source_lengths_and_structures():
+    cfg = tiny_cfg()
+    src = FastaSource(demo_fasta(cfg, n_records=5, seed=3), cfg,
+                      is_path=False)
+    assert len(src) == 5
+    for i in range(len(src)):
+        rec = src.record(i)
+        assert src.record_length(i) == rec.n_res <= cfg.n_res
+        assert len(rec.msa) == cfg.n_seq
+    # a supplied structure overrides the synthetic chain
+    seq, coords = parse_mmcif_lite(MMCIF_LITE)
+    src2 = FastaSource(f">s\n{seq}\n", cfg, structures={"s": coords},
+                       is_path=False)
+    np.testing.assert_array_equal(src2.record(0).coords, coords)
+
+
+# ---------------------------------------------------------------------------
+# bucketing: schedule determinism + coverage
+# ---------------------------------------------------------------------------
+
+def test_bucket_schedule_deterministic_and_covering():
+    cfg = tiny_cfg(n_res=16)
+    src = SyntheticSource(cfg, seed=0, n_records=11, vary_length=True)
+    lengths = [src.record_length(i) for i in range(len(src))]
+    buckets = bk.length_bucket_table(cfg)
+    s1 = bk.BucketSchedule(lengths, buckets, seed=4, batch_size=3)
+    s2 = bk.BucketSchedule(lengths, buckets, seed=4, batch_size=3)
+    e1, e2 = s1.plan_epoch(2), s2.plan_epoch(2)
+    assert e1 == e2 and len(e1) == s1.per_epoch
+    # every record appears in its epoch; every batch is homogeneous in
+    # bucket and full-size (tail wraps within the bucket)
+    seen = set()
+    for plan in e1:
+        assert len(plan.indices) == 3
+        for i in plan.indices:
+            seen.add(i)
+            assert lengths[i] <= plan.bucket.n_res
+    assert seen == set(range(11))
+    # epochs differ (it IS a shuffle) but per_epoch stays fixed
+    assert s1.plan_epoch(0) != s1.plan_epoch(1)
+    # global step -> epoch tiling
+    assert s1.batch_plan(s1.per_epoch + 2) == s1.plan_epoch(1)[2]
+
+
+def test_bucket_for_length_and_pad_record():
+    cfg = tiny_cfg(n_res=16)
+    buckets = bk.length_bucket_table(cfg)
+    assert bk.bucket_for_length(buckets, 3).n_res == 8
+    with pytest.raises(ValueError):
+        bk.bucket_for_length(buckets, 999)
+    rec = SyntheticSource(cfg, seed=1, n_records=2,
+                          vary_length=True).record(0)
+    feats = featurize_record(rec, cfg, seed=0, step=0, idx=0)
+    padded = bk.pad_record_to_bucket(feats, bk.train_bucket(cfg))
+    r = rec.n_res
+    assert padded["target_feat"].shape == (16, cfg.target_feat_dim)
+    assert np.all(padded["res_mask"][r:] == 0)
+    assert np.all(padded["true_msa"][:, r:] == GAP_ID)
+    assert not padded["msa_mask_positions"][:, r:].any()
+    # padded frames stay orthonormal (identity), so geometry stays finite
+    rr = np.einsum("rij,rik->rjk", padded["true_rots"], padded["true_rots"])
+    np.testing.assert_allclose(rr, np.broadcast_to(np.eye(3), rr.shape),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# HostWorkerPool + ShardedLoader failure propagation (the silent-hang fix)
+# ---------------------------------------------------------------------------
+
+def test_host_worker_pool_inline_and_threaded_failures():
+    def fn(x):
+        if x < 0:
+            raise ValueError("bad item")
+        return x * 2
+
+    inline = HostWorkerPool(fn, workers=0)
+    inline.submit(3)
+    assert inline.poll() == [6]
+    inline.submit(-1)
+    (fail,) = inline.poll()
+    assert isinstance(fail, WorkerFailure)
+    inline.submit(-1)
+    with pytest.raises(ValueError, match="bad item"):
+        inline.poll(raise_failures=True)
+
+    pool = HostWorkerPool(fn, workers=2, cap=4)
+    for x in (1, 2, -1, 3):
+        pool.submit(x)
+    got, deadline = [], time.monotonic() + 10
+    while len(got) < 4 and time.monotonic() < deadline:
+        got.extend(pool.poll(block=True, timeout=1.0))
+    pool.close()
+    vals = [g for g in got if not isinstance(g, WorkerFailure)]
+    fails = [g for g in got if isinstance(g, WorkerFailure)]
+    assert sorted(vals) == [2, 4, 6] and len(fails) == 1
+
+
+def test_sharded_loader_worker_exception_propagates():
+    """A make_batch exception must re-raise from the iterator, not leave
+    the consumer blocked on q.get() forever (the silent-hang bug)."""
+    def make_batch(step):
+        if step == 2:
+            raise RuntimeError("synthetic corruption at step 2")
+        return {"x": np.full((2,), step)}
+
+    loader = ShardedLoader(make_batch, start_step=0, prefetch=2)
+    got = []
+
+    def consume():
+        with pytest.raises(RuntimeError, match="step 2"):
+            for step, b in loader:
+                got.append(step)
+
+    t = threading.Thread(target=consume, daemon=True)
+    t.start()
+    t.join(timeout=10.0)
+    assert not t.is_alive(), "consumer hung on a dead worker"
+    assert got == [0, 1]
+
+
+def test_pipeline_worker_exception_propagates():
+    cfg = tiny_cfg()
+
+    def make_batch(step):
+        if step == 3:
+            raise ValueError("boom at 3")
+        from repro.data.protein import protein_batch
+        return protein_batch(0, step, 1, cfg)
+
+    pipe = DataPipeline(cfg, make_batch=make_batch, workers=2)
+    got = []
+    with pytest.raises(RuntimeError, match="failed at step 3") as ei:
+        for step, b in pipe:
+            got.append(step)
+    assert isinstance(ei.value.__cause__, ValueError)
+    # failures are delivered in stream order: every prior step still yields
+    assert got == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# DataPipeline determinism: worker count, re-iterate, resume
+# ---------------------------------------------------------------------------
+
+def _collect(pipe, n):
+    out = []
+    for step, batch in pipe:
+        out.append((step, {k: np.asarray(v) for k, v in batch.items()}))
+        if len(out) >= n:
+            break
+    pipe.close()
+    return out
+
+
+def _assert_streams_equal(a, b):
+    assert [s for s, _ in a] == [s for s, _ in b]
+    for (_, x), (_, y) in zip(a, b):
+        assert sorted(x) == sorted(y)
+        for k in x:
+            np.testing.assert_array_equal(x[k], y[k])
+
+
+def test_pipeline_bit_identical_across_worker_counts():
+    cfg = tiny_cfg(n_res=16)
+    streams = []
+    for workers in (0, 1, 4):
+        src = SyntheticSource(cfg, seed=0, n_records=10, vary_length=True)
+        pipe = DataPipeline(cfg, source=src, batch_size=2, seed=0,
+                            workers=workers, bucket_by_length=True,
+                            pad_to=bk.train_bucket(cfg))
+        streams.append(_collect(pipe, 8))
+    _assert_streams_equal(streams[0], streams[1])
+    _assert_streams_equal(streams[0], streams[2])
+    # training batches carry exactly the protein_sample contract
+    assert sorted(streams[0][0][1]) == sorted(TRAIN_BATCH_KEYS)
+
+
+def test_pipeline_compat_matches_protein_batch():
+    from repro.data.protein import protein_batch
+    cfg = tiny_cfg()
+    pipe = DataPipeline(cfg, batch_size=2, seed=11, workers=2)
+    for step, batch in _collect(pipe, 4):
+        ref = protein_batch(11, step, 2, cfg)
+        for k in ref:
+            np.testing.assert_array_equal(np.asarray(batch[k]),
+                                          np.asarray(ref[k]))
+
+
+def test_pipeline_close_reiterate_and_resume():
+    cfg = tiny_cfg(n_res=16)
+
+    def fresh(start_step=0, workers=3):
+        src = SyntheticSource(cfg, seed=2, n_records=9, vary_length=True)
+        return DataPipeline(cfg, source=src, batch_size=2, seed=2,
+                            start_step=start_step, workers=workers,
+                            bucket_by_length=True,
+                            pad_to=bk.train_bucket(cfg))
+
+    pipe = fresh()
+    first = _collect(pipe, 6)
+    pipe2 = fresh()
+    it = iter(pipe2)
+    with pytest.raises(RuntimeError, match="already being iterated"):
+        iter(pipe2)
+    pipe2.close()
+    second = _collect(pipe2, 6)          # close -> re-iterate works
+    _assert_streams_equal(first, second)
+    # resume at step 3 reproduces the fresh run's tail bit-for-bit
+    resumed = _collect(fresh(start_step=3, workers=1), 3)
+    _assert_streams_equal(first[3:], resumed)
+
+
+def test_pipeline_bucket_by_length_needs_source():
+    cfg = tiny_cfg()
+    with pytest.raises(ValueError, match="record source"):
+        DataPipeline(cfg, bucket_by_length=True)
+
+
+def test_pipeline_report_accounts_steps():
+    cfg = tiny_cfg()
+    src = SyntheticSource(cfg, seed=0, n_records=6, vary_length=True)
+    pipe = DataPipeline(cfg, source=src, batch_size=2, seed=0, workers=2,
+                        bucket_by_length=True, pad_to=bk.train_bucket(cfg))
+    _collect(pipe, 5)
+    d = pipe.report.as_dict()
+    assert d["steps"] >= 5
+    assert 0.0 < d["mean_fill"] <= 1.0
+    assert d["stall_ms_per_step"] >= 0.0
+    assert sum(d["buckets"].values()) == pipe.report.batches
+
+
+# ---------------------------------------------------------------------------
+# TrainRunner: the pipeline behind the real compiled loop
+# ---------------------------------------------------------------------------
+
+def test_trainer_losses_bit_identical_across_workers():
+    from repro.train.trainer import TrainRunner
+    cfg = af2_tiny(n_evoformer=1, n_extra_msa_blocks=1, n_res=8, n_seq=4,
+                   n_extra_seq=6)
+    losses = []
+    for workers in (0, 2):
+        r = TrainRunner(cfg, batch_size=2, seed=0, recycle_sample=False,
+                        ema_decay=None, data_workers=workers)
+        hist = r.run(2)
+        losses.append(hist["loss"])
+        assert hist["data"][-1]["steps"] >= 2
+    assert losses[0] == losses[1]
