@@ -41,6 +41,27 @@ def compare_data_rows(baseline: list, fresh: list, tol: float = 0.10,
     return out
 
 
+def compare_train_rows(baseline: list, fresh: list, tol: float = 0.10,
+                       floor: float = 0.02):
+    """Regressions of committed BENCH_train.json instrumentation overhead.
+
+    The ``train_tiny_obs_overhead`` row's ``overhead_frac`` (instrumented
+    vs default loop, DESIGN.md §14 budget) regresses when the fresh value
+    exceeds the committed one by more than ``tol`` relative AND ``floor``
+    absolute — the floor keeps near-zero overheads (where 10% relative is
+    scheduler jitter on 20s CPU steps) from flapping the gate."""
+    old = {r["scenario"]: r.get("overhead_frac") for r in baseline}
+    out = []
+    for r in fresh:
+        prev = old.get(r["scenario"])
+        cur = r.get("overhead_frac")
+        if prev is None or cur is None:
+            continue
+        if cur > prev * (1 + tol) and cur - prev > floor:
+            out.append((r["scenario"], prev, cur))
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         description="Run benchmark suites; positional names filter suites.")
@@ -68,6 +89,9 @@ def main() -> None:
     data_baseline = []
     if args.compare and common.DATA_JSON.exists():
         data_baseline = json.loads(common.DATA_JSON.read_text())
+    train_baseline = []
+    if args.compare and common.TRAIN_JSON.exists():
+        train_baseline = json.loads(common.TRAIN_JSON.read_text())
     failed = []
     for fn in suites:
         try:
@@ -100,6 +124,18 @@ def main() -> None:
                 "the committed trajectory; BENCH_data.json left untouched")
         print(f"# compare: {len(common.DATA_ROWS)} fresh data rows vs "
               f"{len(data_baseline)} committed, no stall regressions",
+              file=sys.stderr)
+    if args.compare and not failed:
+        train_reg = compare_train_rows(train_baseline, common.TRAIN_ROWS)
+        if train_reg:
+            for scenario, old_f, new_f in train_reg:
+                print(f"# REGRESSION train/{scenario}: overhead_frac "
+                      f"{old_f} -> {new_f}", file=sys.stderr)
+            raise SystemExit(
+                f"{len(train_reg)} training row(s) regressed >10% vs the "
+                "committed trajectory; BENCH_train.json left untouched")
+        print(f"# compare: {len(common.TRAIN_ROWS)} fresh train rows vs "
+              f"{len(train_baseline)} committed, no overhead regressions",
               file=sys.stderr)
     if common.KERNEL_ROWS and not failed:
         # only a fully-green run may overwrite the committed trajectories —

@@ -16,10 +16,18 @@ benchmarks/run.py):
   loop: the streaming DataPipeline (worker featurize + device-put
   lookahead) must produce the bit-identical loss trajectory of the inline
   path at no worse steps/s, with the input-stall breakdown recorded.
+* ``train_tiny_obs_overhead`` — the DESIGN.md §14 overhead budget: the
+  fully-instrumented loop (JSONL metric sink + span tracer + per-step
+  registry ticks) vs the default loop, same seed so the two runs execute
+  the same recycle draws.  ``overhead_frac`` is gated by
+  benchmarks/run.py --compare (compare_train_rows) against the committed
+  trajectory so instrumentation cost cannot creep in silently.
 """
 from __future__ import annotations
 
+import tempfile
 import time
+from pathlib import Path
 
 from benchmarks.common import emit_train
 
@@ -107,4 +115,39 @@ def train_tiny_pipeline_parity():
     })
 
 
-ALL = [train_tiny_throughput, train_tiny_lddt, train_tiny_pipeline_parity]
+def train_tiny_obs_overhead():
+    from repro.obs import JsonlSink, MetricRegistry, SpanTracer
+
+    def timed(obs=None, tracer=None):
+        r = _runner(obs=obs, tracer=tracer)
+        r.run(1)                           # compile outside the timed region
+        t0 = time.perf_counter()
+        hist = r.run(5)
+        return r, hist, time.perf_counter() - t0
+
+    r0, h0, dt0 = timed()                  # default: registry, no sinks
+    with tempfile.TemporaryDirectory() as td:
+        obs = MetricRegistry(sinks=[JsonlSink(Path(td) / "m.jsonl")])
+        tracer = SpanTracer()
+        r1, h1, dt1 = timed(obs=obs, tracer=tracer)
+        obs.close()
+        rows = sum(1 for _ in open(Path(td) / "m.jsonl"))
+    assert h0["loss"] == h1["loss"], (
+        "instrumentation changed the loss trajectory: "
+        f"{h0['loss']} vs {h1['loss']}")
+    steps = len(h1["loss"]) - 1
+    emit_train("train_tiny_obs_overhead", {
+        "steps": steps,
+        "batch": r1.batch_size,
+        "losses_bit_identical": True,
+        "compiles": r1.train_compiles,
+        "base_step_ms": round(1e3 * dt0 / steps, 2),
+        "instrumented_step_ms": round(1e3 * dt1 / steps, 2),
+        "overhead_frac": round(max(0.0, dt1 / dt0 - 1.0), 4),
+        "sink_rows": rows,
+        "spans": len(tracer.spans()),
+    })
+
+
+ALL = [train_tiny_throughput, train_tiny_lddt, train_tiny_pipeline_parity,
+       train_tiny_obs_overhead]

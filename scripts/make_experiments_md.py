@@ -449,6 +449,7 @@ def main(argv=None):
     doc.append(serve_section())
     doc.append(train_section())
     doc.append(data_section())
+    doc.append(obs_section())
     doc.append(paper_claims_section(af2))
     (ROOT / "EXPERIMENTS.md").write_text("\n".join(doc))
     print("wrote EXPERIMENTS.md")
@@ -514,6 +515,62 @@ def data_section():
         keys = ", ".join(f"{k}={v}" for k, v in r.items() if k != "scenario")
         out.append(f"| {r['scenario']} | {keys} |")
     return "\n".join(out)
+
+
+def obs_section():
+    """§Telemetry: the instrumentation-overhead row from BENCH_train.json
+    (benchmarks/train_bench.py::train_tiny_obs_overhead) plus the
+    attribution methodology.  Gated on the committed row like every other
+    section — no artifact, no asserted numbers."""
+    out = [OBS_PREAMBLE]
+    path = ROOT / "BENCH_train.json"
+    row = None
+    if path.exists():
+        rows = json.loads(path.read_text())
+        row = next((r for r in rows
+                    if r["scenario"] == "train_tiny_obs_overhead"), None)
+    if row is None:
+        out.append(missing("telemetry-overhead row "
+                           "(train_tiny_obs_overhead in BENCH_train.json)",
+                           hint="run `python -m benchmarks.run`"))
+        return "\n".join(out)
+    out.append(
+        f"Measured on the committed row: default loop "
+        f"{row['base_step_ms']} ms/step vs fully-instrumented "
+        f"{row['instrumented_step_ms']} ms/step over {row['steps']} steps — "
+        f"**overhead_frac {row['overhead_frac']}** (budget: <= 0.02 plus "
+        "timing noise; `--compare` pins regressions at 10% relative with a "
+        "2-point absolute floor).  The instrumented run emitted "
+        f"{row['sink_rows']} JSONL rows and {row['spans']} host spans with "
+        "a bit-identical loss trajectory "
+        f"(losses_bit_identical={row['losses_bit_identical']}, compiles="
+        f"{row['compiles']}) — instrumentation observes the loop without "
+        "perturbing its math or its compile count.")
+    return "\n".join(out)
+
+
+OBS_PREAMBLE = """
+## §Telemetry & attribution (obs/)
+
+The unified telemetry layer (DESIGN.md §14): one `MetricRegistry` funnel
+(events immediately, instruments deduped at per-step ticks; sink rows
+bit-identical across runs modulo wall-time), a host-side span tracer
+exporting Chrome-trace JSON that Perfetto loads directly
+(`--trace-out`; featurize/device_put/step/eval/checkpoint on train,
+admit/recycle_step/harvest/fold_step on serve), and the
+roofline-vs-measured attribution report: at every eval window the runner
+compares measured mean step time against `predict_step_time`'s roofline
+price for the same (cfg, plan, batch, mean recycle draw) and logs
+achieved FLOP/s, MFU against the v5e peak, and goodput
+(1 - stall_fraction - eval/checkpoint overhead).  On the CPU smoke rig
+the measured/predicted ratio is ~1e6 (a CPU running a TPU-priced model)
+— the *plumbing* is the claim at this scale; the ratio approaching 1 is
+the full-scale acceptance signal.  Attribution rows land in
+`history["attribution"]`, the JSONL stream, and the periodic
+`--obs-every` console summary, alongside the `train/async_overlap_ok`
+verdict (`--hlo-check`, skip reason recorded when the HLO splits no
+collectives).
+"""
 
 
 DATA_PREAMBLE = """

@@ -73,3 +73,12 @@ python -m pytest -x -q -m serve_load
 # standalone for data-layer changes: ./scripts/run_tier1.sh -m data
 echo "== tier-1h: input-pipeline tier (ingest / bucketing / DataPipeline) =="
 python -m pytest -x -q -m data
+
+# tier-1i: the telemetry tier (marker: obs) — metric-registry determinism
+# (bit-identical JSONL modulo wall-times), span nesting/ordering invariants,
+# Chrome-trace (Perfetto) schema validity, TrainRunner history-as-registry-
+# view equality, FoldEngine lifetime-vs-per-call counter split, attribution
+# report fields.  Also in the main pass; standalone for obs-layer changes:
+# ./scripts/run_tier1.sh -m obs
+echo "== tier-1i: telemetry tier (obs registry / spans / attribution) =="
+python -m pytest -x -q -m obs

@@ -301,6 +301,49 @@ def estimate_block_time(cfg, *, bp: int = 1, dap: int = 1, hw: HW = HW(),
     return t
 
 
+def predict_step_time(cfg, *, bp: int = 1, dap: int = 1, pod: int = 1,
+                      data: int = 1, global_batch: int = 1,
+                      n_recycle: float = 1.0, hw: HW = HW(), elt: int = 2,
+                      overlap: bool = None) -> dict:
+    """Roofline prediction for one full train step under a ParallelPlan.
+
+    Extends the per-block model (``estimate_block_time``) to a whole step:
+    the main-stack block time is extrapolated to the full trunk (extra-MSA
+    stack + structure module) by the analytic FLOPs ratio
+    ``af2_model_flops / main-stack FLOPs``, recycling runs ``n_recycle``
+    forward passes of which only the last carries a backward, and each
+    data-parallel group steps over its local batch.  This is the number the
+    attribution report (obs layer) confronts with the measured step time —
+    the same cost model ``auto_plan`` ranks plans with, now continuously
+    validated against reality.
+    """
+    d_groups = max(pod, 1) * max(data, 1)
+    local_batch = global_batch / d_groups
+    t_fb = estimate_block_time(cfg, bp=bp, dap=dap, hw=hw, fwd_bwd=True,
+                               elt=elt, overlap=overlap)
+    t_f = estimate_block_time(cfg, bp=bp, dap=dap, hw=hw, fwd_bwd=False,
+                              elt=elt, overlap=overlap)
+    f_msa, f_pair = evo_branch_flops(cfg)
+    main_fwd = cfg.n_evoformer * (f_msa + f_pair)
+    total_fwd = af2_model_flops(cfg, 1.0)
+    scale = total_fwd / main_fwd if main_fwd > 0 else 1.0
+    nr = max(float(n_recycle), 1.0)
+    per_protein = scale * cfg.n_evoformer * ((nr - 1.0) * t_f + t_fb)
+    predicted = local_batch * per_protein
+    # model FLOPs actually spent per optimizer step (backward ~ 2x forward,
+    # on the differentiated last cycle only)
+    flops_per_protein = af2_model_flops(cfg, nr) + 2.0 * af2_model_flops(cfg, 1.0)
+    return {
+        "predicted_step_s": predicted,
+        "block_fwdbwd_s": t_fb,
+        "block_fwd_s": t_f,
+        "trunk_scale": scale,
+        "local_batch": local_batch,
+        "model_flops_per_step": flops_per_protein * global_batch,
+        "n_devices": d_groups * max(bp, 1) * max(dap, 1),
+    }
+
+
 def af2_model_flops(cfg, n_recycle: float = 1.0) -> float:
     """Analytical AF2 trunk FLOPs per protein per fwd pass (x3 for train).
 

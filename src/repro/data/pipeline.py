@@ -278,8 +278,14 @@ class DataPipeline:
                  buckets: Optional[list] = None,
                  pad_to: Optional[bk.Bucket] = None,
                  include_row_masks: bool = False, sharding=None,
-                 make_batch: Optional[Callable] = None):
+                 make_batch: Optional[Callable] = None, obs=None,
+                 tracer=None):
         self.cfg = cfg
+        # obs MetricRegistry + SpanTracer (DESIGN.md §14): per-stage seconds
+        # mirror into data/* gauges each step and featurize/device_put/
+        # input_wait become host spans; None keeps the bare-report path
+        self.obs = obs
+        self.tracer = tracer
         self.source = source
         self.batch_size = batch_size
         self.seed = seed
@@ -315,6 +321,11 @@ class DataPipeline:
     # -- batch synthesis (pure in (seed, step)) ------------------------------
 
     def _make_batch(self, step: int) -> _HostBatch:
+        from repro.obs import trace_span
+        with trace_span("featurize", tracer=self.tracer, step=step):
+            return self._make_batch_inner(step)
+
+    def _make_batch_inner(self, step: int) -> _HostBatch:
         t0 = time.perf_counter()
         if self._custom_make_batch is not None:
             batch, fill, bucket = self._custom_make_batch(step), 1.0, None
@@ -348,8 +359,10 @@ class DataPipeline:
         if self.sharding is None:
             return hb.batch
         import jax
+        from repro.obs import trace_span
         t0 = time.perf_counter()
-        placed = jax.device_put(hb.batch, self.sharding)
+        with trace_span("device_put", tracer=self.tracer, step=hb.step):
+            placed = jax.device_put(hb.batch, self.sharding)
         self.report.transfer_s += time.perf_counter() - t0
         return placed
 
@@ -417,6 +430,7 @@ class DataPipeline:
                 next_submit += 1
             return hb
 
+        from repro.obs import trace_span
         t_loop = time.perf_counter()
         pending: Optional[tuple] = None     # (step, placed) put one ahead
         step = self.start_step
@@ -426,7 +440,8 @@ class DataPipeline:
                 placed = pending[1]
                 pending = None
             else:
-                hb = host_batch(step, block=True)
+                with trace_span("input_wait", tracer=self.tracer, step=step):
+                    hb = host_batch(step, block=True)
                 if isinstance(hb, WorkerFailure):
                     raise RuntimeError(
                         f"DataPipeline worker failed at step {step} "
@@ -445,8 +460,24 @@ class DataPipeline:
                     pending = (step + 1, self._place(nb))
             self.report.steps += 1
             self.report.wall_s = time.perf_counter() - t_loop
+            if self.obs is not None:
+                self._mirror_report(step)
             yield step, placed
             step += 1
+
+    def _mirror_report(self, step: int) -> None:
+        """Per-step mirror of the stage report into data/* gauges — the
+        registry tick (driven by the consumer) flushes them to sinks, so
+        the stall report surfaces mid-run through the console sink instead
+        of only at eval/end-of-run."""
+        r = self.report
+        obs = self.obs
+        obs.gauge("data/stall_fraction").set(r.stall_fraction)
+        obs.gauge("data/featurize_s").set(r.featurize_s)
+        obs.gauge("data/queue_s").set(r.queue_s)
+        obs.gauge("data/transfer_s").set(r.transfer_s)
+        obs.gauge("data/stall_s").set(r.stall_s)
+        obs.gauge("data/mean_fill").set(r.mean_fill)
 
     def _account(self, hb: _HostBatch) -> None:
         self.report.batches += 1

@@ -65,6 +65,14 @@ def main():
     ap.add_argument("--starvation-steps", type=int, default=16,
                     help="steps a lane may be passed over before it is "
                          "force-scheduled")
+    # -- observability (DESIGN.md §14), fold path ---------------------------
+    ap.add_argument("--metrics-out", default="",
+                    help="fold: write the obs metric stream (serve/* "
+                         "counters, per-call deltas, report gauges) as "
+                         "JSONL to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="fold: write host spans (admit/recycle_step/"
+                         "harvest/fold_step) as Chrome-trace JSON")
     args = ap.parse_args()
 
     if not args.arch and not args.fold:
@@ -164,10 +172,15 @@ def run_fold(args):
     long_plan = (ParallelPlan(data=n_dev // args.dap, dap=args.dap)
                  if args.dap > 1 else None)
     params = af2.init_params(jax.random.PRNGKey(0), cfg)
+    from repro.obs import JsonlSink, MetricRegistry, SpanTracer
+    obs = MetricRegistry(
+        sinks=[JsonlSink(args.metrics_out)] if args.metrics_out else [])
+    tracer = SpanTracer(process_name="fold-serve") if args.trace_out else None
     try:
         engine = FoldEngine(cfg, params, long_plan=long_plan,
                             micro_batch=args.micro_batch,
-                            max_recycle=args.max_recycle, tol=args.tol)
+                            max_recycle=args.max_recycle, tol=args.tol,
+                            obs=obs, tracer=tracer)
     except PlanError as e:
         raise SystemExit(f"fold plan rejected: {e}")
     print(f"fold engine: {args.fold} cfg, {n_dev} device(s), buckets "
@@ -179,11 +192,12 @@ def run_fold(args):
     reqs = make_fold_requests(cfg, args.requests, args.seed)
     if args.arrival_rate > 0:
         run_fold_traffic(args, engine, reqs)
+        finish_fold_obs(args, engine)
         return
     t0 = time.time()
     done = engine.run(reqs)
     dt = time.time() - t0
-    st = engine.stats
+    st = engine.last_stats    # THIS call's deltas, not lifetime totals
     saved = st["recycles_budget"] - st["recycles_run"]
     print(f"served {len(done)} folds in {dt:.1f}s "
           f"({len(done) / dt:.2f} folds/s aggregate), "
@@ -194,6 +208,19 @@ def run_fold(args):
         print(f"  req {rid}: len={r.coords.shape[0]} bucket<= "
               f"{r.bucket.n_res} plddt={r.plddt.mean():.1f} "
               f"recycles={r.n_recycles} converged={r.converged}")
+    finish_fold_obs(args, engine)
+
+
+def finish_fold_obs(args, engine):
+    """Flush the fold engine's metric stream / host trace to disk."""
+    engine.obs.tick()
+    if engine.tracer is not None and args.trace_out:
+        engine.tracer.save(args.trace_out)
+        print(f"trace: {len(engine.tracer.spans())} spans -> "
+              f"{args.trace_out}")
+    engine.obs.close()
+    if args.metrics_out:
+        print(f"metrics: JSONL stream -> {args.metrics_out}")
 
 
 def run_fold_traffic(args, engine, reqs):

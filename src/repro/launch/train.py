@@ -119,6 +119,28 @@ def main():
                          "different ParallelPlan")
     ap.add_argument("--compress-pod-grads", action="store_true")
     ap.add_argument("--log-every", type=int, default=1)
+    # -- observability (DESIGN.md §14) --------------------------------------
+    ap.add_argument("--metrics-out", default="",
+                    help="AF2: write the obs metric stream (loss, step_s, "
+                         "data stalls, attribution, ckpt timings) as JSONL "
+                         "to this path")
+    ap.add_argument("--trace-out", default="",
+                    help="AF2: write host spans (featurize/device_put/step/"
+                         "eval/checkpoint) as Chrome-trace JSON — load in "
+                         "Perfetto or chrome://tracing")
+    ap.add_argument("--profile-steps", default="",
+                    help="AF2: 'A:B' — arm jax.profiler.trace over steps "
+                         "[A, B), aligned to the host spans' step ids; the "
+                         "device trace lands in <trace-out>.profile/ (or "
+                         "./jax_profile)")
+    ap.add_argument("--obs-every", type=int, default=0,
+                    help="AF2: print a periodic console summary of the "
+                         "latest metrics (incl. the data stall report) "
+                         "every N steps (0 disables)")
+    ap.add_argument("--hlo-check", action="store_true",
+                    help="AF2: lower the train step once, check async-"
+                         "collective overlap in the optimized HLO, record "
+                         "the verdict as the train/async_overlap_ok metric")
     args = ap.parse_args()
 
     if args.print_tpu_env:
@@ -177,6 +199,24 @@ def run_af2(args, jax, jnp, np):
         raise SystemExit("--bucket-by-length needs --data-source fasta "
                          "(the synthetic stream is fixed-shape)")
 
+    # -- telemetry wiring (DESIGN.md §14) -----------------------------------
+    from repro.obs import (ConsoleSink, JsonlSink, MetricRegistry,
+                           ProfileWindow, SpanTracer, parse_profile_steps)
+    sinks = []
+    if args.metrics_out:
+        sinks.append(JsonlSink(args.metrics_out))
+    if args.obs_every:
+        sinks.append(ConsoleSink(every=args.obs_every,
+                                 prefixes=("data/", "train/", "ckpt/")))
+    obs = MetricRegistry(sinks=sinks)
+    tracer = SpanTracer() if args.trace_out else None
+    profile_window = None
+    if args.profile_steps:
+        lo, hi = parse_profile_steps(args.profile_steps)
+        logdir = (f"{args.trace_out}.profile" if args.trace_out
+                  else "jax_profile")
+        profile_window = ProfileWindow(lo, hi, logdir)
+
     # paper §5.2 / AF2 suppl. 1.11.3: clip each SAMPLE's gradient at 0.1
     opt = adamw(af2_lr_schedule(args.lr, warmup_steps=100),
                 per_sample_clip=0.1)
@@ -189,6 +229,8 @@ def run_af2(args, jax, jnp, np):
         install_sigterm=True, deterministic=False,
         data_source=source, data_workers=args.data_workers,
         bucket_by_length=args.bucket_by_length,
+        obs=obs, tracer=tracer, profile_window=profile_window,
+        hlo_check=args.hlo_check,
         on_straggler=lambda s, dt, ema: print(
             f"  [watchdog] step {s} took {dt:.2f}s (EMA {ema:.2f}s)"))
     n_params = sum(x.size for x in
@@ -218,6 +260,30 @@ def run_af2(args, jax, jnp, np):
               f"({100 * d['stall_fraction']:.1f}% of loop), featurize "
               f"{d['featurize_ms_per_step']}ms, transfer "
               f"{d['transfer_ms_per_step']}ms, fill {d['mean_fill']:.2f}")
+    # end-of-run attribution: roofline-vs-measured for the full run (when
+    # --eval-every also produced windows, those rows are in the stream too)
+    from repro.obs import describe_attribution
+    step_s = runner.history["step_s"]
+    settled = step_s[1:] or step_s      # drop the compile step
+    if settled:
+        attr = runner.attribution(
+            measured_step_s=sum(settled) / len(settled),
+            n_recycle=(sum(runner.history["n_recycle"])
+                       / max(len(runner.history["n_recycle"]), 1)),
+            stall_fraction=(data[-1]["stall_fraction"] if data else 0.0),
+            wall_s=time.time() - t_start, step=runner.step)
+        print(describe_attribution(attr))
+    if args.hlo_check:
+        ov = runner.obs.series("train/async_overlap_ok")
+        if ov:
+            print(f"async_overlap_ok: {ov[-1]}")
+    if tracer is not None:
+        tracer.save(args.trace_out)
+        print(f"trace: {len(tracer.spans())} spans -> {args.trace_out}")
+    obs.flush()
+    obs.close()
+    if args.metrics_out:
+        print(f"metrics: JSONL stream -> {args.metrics_out}")
 
 
 def run_lm(args, jax, jnp, np):

@@ -1,0 +1,130 @@
+"""Metric sinks: in-memory (tests), JSONL file (runs), periodic console.
+
+Every sink receives every registry row (events immediately, instruments at
+``tick`` — see :mod:`repro.obs.registry`).  Rows are plain dicts with
+``kind``/``name``/``seq``/``t`` plus kind-specific fields; ``t`` is the
+ONLY wall-clock field, so determinism tests strip it and compare the rest
+bit-for-bit.
+"""
+from __future__ import annotations
+
+import json
+from typing import Iterable, Optional
+
+
+class MemorySink:
+    """Capture rows in a list — the test sink."""
+
+    def __init__(self):
+        self.rows: list = []
+
+    def write(self, row: dict) -> None:
+        self.rows.append(dict(row))
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        pass
+
+    def events(self, name: Optional[str] = None) -> list:
+        return [r for r in self.rows if r["kind"] == "event"
+                and (name is None or r["name"] == name)]
+
+
+class JsonlSink:
+    """One canonical-JSON row per line (sorted keys → diffable streams)."""
+
+    def __init__(self, path):
+        self.path = path
+        self._f = open(path, "w")
+
+    def write(self, row: dict) -> None:
+        self._f.write(json.dumps(row, sort_keys=True, default=str) + "\n")
+
+    def flush(self) -> None:
+        self._f.flush()
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            self._f.close()
+
+
+def strip_walltimes(lines: Iterable[str]) -> list:
+    """Drop the wall-clock field from JSONL rows — the determinism-test
+    normalization (same run ⇒ identical output after this)."""
+    out = []
+    for ln in lines:
+        if not ln.strip():
+            continue
+        row = json.loads(ln)
+        row.pop("t", None)
+        out.append(json.dumps(row, sort_keys=True))
+    return out
+
+
+class ConsoleSink:
+    """Periodic one-line summaries of the latest instrument/event values.
+
+    Prints at ``tick`` rows whose step is a multiple of ``every`` (and at
+    ``close``), showing the latest value per matching name — the
+    mid-run visibility layer (e.g. the DataPipeline stall report between
+    evals).  ``prefixes`` filters which names are shown (None = all).
+    """
+
+    def __init__(self, every: int = 20, log=print, prefixes=None):
+        if every < 1:
+            raise ValueError("ConsoleSink every must be >= 1")
+        self.every = every
+        self.log = log
+        self.prefixes = tuple(prefixes) if prefixes else None
+        self._latest: dict = {}
+        self._dirty = False
+        self._last_printed_step: Optional[int] = None
+
+    def _want(self, name: str) -> bool:
+        return self.prefixes is None or name.startswith(self.prefixes)
+
+    @staticmethod
+    def _fmt(v) -> str:
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        if isinstance(v, dict):
+            return "{" + ",".join(
+                f"{k}={ConsoleSink._fmt(x)}" for k, x in sorted(v.items())
+                if isinstance(x, (int, float))) + "}"
+        return str(v)
+
+    def write(self, row: dict) -> None:
+        kind = row["kind"]
+        if kind == "tick":
+            step = row.get("step")
+            if (step is not None and step % self.every == 0
+                    and step != self._last_printed_step):
+                self._print(step)
+            return
+        if not self._want(row["name"]):
+            return
+        if kind == "event":
+            self._latest[row["name"]] = row["value"]
+        elif kind in ("counter", "gauge"):
+            self._latest[row["name"]] = row["value"]
+        else:  # histogram
+            self._latest[row["name"]] = {
+                k: row[k] for k in ("count", "p50", "p99") if k in row}
+        self._dirty = True
+
+    def _print(self, step) -> None:
+        if not self._dirty:
+            return
+        parts = [f"{k}={self._fmt(v)}" for k, v in sorted(self._latest.items())]
+        self.log(f"  [obs step {step}] " + "  ".join(parts))
+        self._dirty = False
+        self._last_printed_step = step
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        self._print("end")

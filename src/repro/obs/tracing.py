@@ -1,0 +1,210 @@
+"""Host-side span tracer with Chrome-trace/Perfetto JSON export.
+
+``with trace_span("step", step=7):`` records one complete event ("ph":"X")
+per exit, with per-thread nesting depth tracked so invariants (a child's
+interval lies inside its parent's) are testable.  Timestamps come from a
+single ``perf_counter`` epoch per tracer, converted to microseconds — the
+unit Chrome-trace expects.
+
+The tracer is either passed explicitly (``trace_span(name, tracer=t)``)
+or installed process-wide with :func:`set_tracer` so deep call sites
+(worker threads inside ``DataPipeline``) don't need plumbing.  When no
+tracer is active, ``trace_span`` is a no-op context manager with ~zero
+overhead.
+
+An optional :class:`ProfileWindow` arms ``jax.profiler.trace`` over a step
+interval ``A:B`` (``--profile-steps``) aligned to the same step ids as the
+host spans.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from contextlib import contextmanager
+from typing import Optional, Tuple
+
+
+class SpanTracer:
+    """Collects nestable host spans; exports Chrome-trace JSON."""
+
+    def __init__(self, *, pid: int = 1, process_name: str = "repro"):
+        self.pid = pid
+        self.process_name = process_name
+        self._epoch = time.perf_counter()
+        self._lock = threading.Lock()
+        self._local = threading.local()
+        self.events: list = []          # finished spans, completion order
+        self._tids: dict = {}           # thread ident -> small int
+        self._tid_names: dict = {}      # small int -> thread name
+
+    # -- time ----------------------------------------------------------------
+
+    def now_us(self) -> float:
+        return (time.perf_counter() - self._epoch) * 1e6
+
+    # -- thread bookkeeping --------------------------------------------------
+
+    def _tid(self) -> int:
+        ident = threading.get_ident()
+        with self._lock:
+            tid = self._tids.get(ident)
+            if tid is None:
+                tid = len(self._tids)
+                self._tids[ident] = tid
+                self._tid_names[tid] = threading.current_thread().name
+            return tid
+
+    def _stack(self) -> list:
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = self._local.stack = []
+        return st
+
+    # -- spans ---------------------------------------------------------------
+
+    @contextmanager
+    def span(self, name: str, **args):
+        tid = self._tid()
+        stack = self._stack()
+        depth = len(stack)
+        t0 = self.now_us()
+        stack.append(name)
+        try:
+            yield self
+        finally:
+            stack.pop()
+            t1 = self.now_us()
+            ev = {"name": name, "ph": "X", "ts": t0, "dur": t1 - t0,
+                  "pid": self.pid, "tid": tid,
+                  "args": {k: _arg(v) for k, v in args.items()}}
+            ev["args"]["depth"] = depth
+            with self._lock:
+                self.events.append(ev)
+
+    def instant(self, name: str, **args) -> None:
+        """A zero-duration marker ("ph":"i") — step boundaries etc."""
+        ev = {"name": name, "ph": "i", "ts": self.now_us(), "s": "t",
+              "pid": self.pid, "tid": self._tid(),
+              "args": {k: _arg(v) for k, v in args.items()}}
+        with self._lock:
+            self.events.append(ev)
+
+    # -- export --------------------------------------------------------------
+
+    def to_chrome_trace(self) -> dict:
+        """Chrome-trace JSON object — loadable by Perfetto / chrome://tracing."""
+        with self._lock:
+            meta = [{"name": "process_name", "ph": "M", "pid": self.pid,
+                     "tid": 0, "args": {"name": self.process_name}}]
+            for tid in sorted(self._tid_names):
+                meta.append({"name": "thread_name", "ph": "M",
+                             "pid": self.pid, "tid": tid,
+                             "args": {"name": self._tid_names[tid]}})
+            return {"traceEvents": meta + list(self.events),
+                    "displayTimeUnit": "ms"}
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(), f)
+
+    def spans(self, name: Optional[str] = None) -> list:
+        with self._lock:
+            return [e for e in self.events if e["ph"] == "X"
+                    and (name is None or e["name"] == name)]
+
+
+def _arg(v):
+    if isinstance(v, (bool, int, float, str)) or v is None:
+        return v
+    return str(v)
+
+
+# -- module-global tracer (worker threads reach it without plumbing) ----------
+
+_GLOBAL: Optional[SpanTracer] = None
+
+
+def set_tracer(tracer: Optional[SpanTracer]) -> Optional[SpanTracer]:
+    """Install ``tracer`` process-wide; returns the previous one."""
+    global _GLOBAL
+    prev = _GLOBAL
+    _GLOBAL = tracer
+    return prev
+
+
+def get_tracer() -> Optional[SpanTracer]:
+    return _GLOBAL
+
+
+@contextmanager
+def trace_span(name: str, *, tracer: Optional[SpanTracer] = None, **args):
+    """Span against ``tracer``, the global tracer, or no-op when neither."""
+    t = tracer if tracer is not None else _GLOBAL
+    if t is None:
+        yield None
+        return
+    with t.span(name, **args):
+        yield t
+
+
+# -- jax.profiler capture window ---------------------------------------------
+
+def parse_profile_steps(spec: str) -> Tuple[int, int]:
+    """``"A:B"`` -> (A, B): capture begins entering step A, ends after
+    step B-1 (half-open, like a Python slice)."""
+    a, _, b = spec.partition(":")
+    lo, hi = int(a), int(b)
+    if hi <= lo:
+        raise ValueError(f"--profile-steps {spec!r}: need A < B")
+    return lo, hi
+
+
+class ProfileWindow:
+    """Arms ``jax.profiler.trace`` over a half-open step range.
+
+    Call :meth:`maybe_start`/:meth:`maybe_stop` at each step boundary with
+    the current step id; the device trace lands in ``logdir`` aligned to
+    the same step ids as the host spans.  Failures to start/stop (e.g. no
+    profiler support on the backend) degrade to a warning, never crash
+    the run.
+    """
+
+    def __init__(self, lo: int, hi: int, logdir: str, log=print):
+        self.lo, self.hi = lo, hi
+        self.logdir = logdir
+        self.log = log
+        self.active = False
+
+    def maybe_start(self, step: int) -> None:
+        if self.active or step != self.lo:
+            return
+        try:
+            import jax
+            jax.profiler.start_trace(self.logdir)
+            self.active = True
+            self.log(f"[obs] jax.profiler capture ON at step {step} "
+                     f"-> {self.logdir}")
+        except Exception as e:  # pragma: no cover - backend dependent
+            self.log(f"[obs] jax.profiler start failed: {e}")
+            self.lo = -1  # don't retry
+
+    def maybe_stop(self, step: int) -> None:
+        if not self.active or step + 1 != self.hi:
+            return
+        try:
+            import jax
+            jax.profiler.stop_trace()
+            self.log(f"[obs] jax.profiler capture OFF after step {step}")
+        except Exception as e:  # pragma: no cover - backend dependent
+            self.log(f"[obs] jax.profiler stop failed: {e}")
+        self.active = False
+
+    def close(self) -> None:
+        if self.active:  # pragma: no cover - abnormal exit path
+            try:
+                import jax
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+            self.active = False

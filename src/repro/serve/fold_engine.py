@@ -77,7 +77,9 @@ class FoldEngine:
     def __init__(self, cfg, params, *, buckets=None, plan=None,
                  long_plan=None, long_threshold: Optional[int] = None,
                  micro_batch: int = 2, max_recycle: Optional[int] = None,
-                 tol: float = 0.0, dtype=None, devices=None):
+                 tol: float = 0.0, dtype=None, devices=None, obs=None,
+                 tracer=None):
+        from repro.obs import MetricRegistry
         from repro.parallel.plan import ParallelPlan
         self.cfg = cfg
         self.params = params
@@ -104,9 +106,59 @@ class FoldEngine:
         self._steps: Dict[tuple, object] = {}
         self._built: Dict[object, object] = {}  # plan -> BuiltPlan
         self.compile_misses = 0                 # jit-cache-miss counter
+        # telemetry (DESIGN.md §14): every stat mutation goes through
+        # ``bump``/``bump_bucket`` so `stats` (the LIFETIME view, monotone
+        # across calls) and the registry's serve/* counters stay in lockstep
+        self.obs = obs if obs is not None else MetricRegistry()
+        self.tracer = tracer
         self.stats = {"requests": 0, "steps": 0, "recycles_run": 0,
                       "recycles_budget": 0, "per_bucket": {}}
+        # PER-CALL deltas of the most recent run()/serve(): lifetime ratios
+        # (e.g. recycles_run / recycles_budget) drift as calls accumulate;
+        # this is the window a single call's efficiency must be judged on
+        self.last_stats: dict = {}
         self.last_report: dict = {}             # serve()'s stage/latency report
+
+    # -- stat funnel (lifetime dict + registry counters, one mutation path) --
+
+    _SCALAR_STATS = ("requests", "steps", "recycles_run", "recycles_budget")
+
+    def bump(self, key: str, n: int = 1) -> None:
+        """Increment a lifetime counter AND its registry twin."""
+        self.stats[key] += n
+        self.obs.counter(f"serve/{key}").inc(n)
+
+    def bump_bucket(self, bucket: fs.Bucket, *, requests: int = 0,
+                    steps: int = 0, seconds: float = 0.0) -> None:
+        pb = self.stats["per_bucket"].setdefault(
+            bucket, {"requests": 0, "steps": 0, "seconds": 0.0})
+        pb["requests"] += requests
+        pb["steps"] += steps
+        pb["seconds"] += seconds
+        tag = bucket.describe()
+        if requests:
+            self.obs.counter("serve/bucket_requests", bucket=tag).inc(requests)
+        if steps:
+            self.obs.counter("serve/bucket_steps", bucket=tag).inc(steps)
+        if seconds:
+            self.obs.histogram("serve/bucket_step_s", bucket=tag).observe(
+                seconds)
+
+    def _call_begin(self) -> dict:
+        return {k: self.stats[k] for k in self._SCALAR_STATS}
+
+    def _call_end(self, kind: str, snap: dict) -> dict:
+        """Close a run()/serve() window: ``last_stats`` = this call's deltas
+        (requests/steps/recycles served by THIS call only), recorded as one
+        serve/call event."""
+        self.last_stats = {k: self.stats[k] - snap[k]
+                           for k in self._SCALAR_STATS}
+        self.last_stats["call"] = kind
+        budget = self.last_stats["recycles_budget"]
+        self.last_stats["recycle_fraction"] = (
+            self.last_stats["recycles_run"] / budget if budget else 0.0)
+        self.obs.record("serve/call", dict(self.last_stats))
+        return self.last_stats
 
     # -- plan / step cache ---------------------------------------------------
 
@@ -180,42 +232,44 @@ class FoldEngine:
         queue = [(fs.bucket_for(self.buckets, r.features), r)
                  for r in requests]
         done: Dict[int, FoldResult] = {}
-        while queue:
-            bucket, head = queue.pop(0)
-            group = [head]
-            cap = self._batch_extent(bucket)
-            rest = []
-            for b, req in queue:
-                if len(group) < cap and b == bucket:
-                    group.append(req)
-                else:
-                    rest.append((b, req))
-            queue = rest
-            for req, res in zip(group, self._run_group(bucket, group)):
-                done[req.rid] = res
+        snap = self._call_begin()
+        try:
+            while queue:
+                bucket, head = queue.pop(0)
+                group = [head]
+                cap = self._batch_extent(bucket)
+                rest = []
+                for b, req in queue:
+                    if len(group) < cap and b == bucket:
+                        group.append(req)
+                    else:
+                        rest.append((b, req))
+                queue = rest
+                for req, res in zip(group, self._run_group(bucket, group)):
+                    done[req.rid] = res
+        finally:
+            self._call_end("run", snap)
         return done
 
     def _run_group(self, bucket: fs.Bucket, group: List[FoldRequest]):
         import jax
+        from repro.obs import trace_span
         cap = self._batch_extent(bucket)
         padded = [fs.pad_to_bucket(r.features, bucket) for r in group]
         batch = fs.stack_padded(padded, cap)
         step = self.step_for(bucket)
         t0 = time.perf_counter()
-        out = step(self.params, batch)
-        out = jax.tree_util.tree_map(np.asarray, out)
+        with trace_span("fold_step", tracer=self.tracer,
+                        bucket=bucket.describe(), n=len(group)):
+            out = step(self.params, batch)
+            out = jax.tree_util.tree_map(np.asarray, out)
         dt = time.perf_counter() - t0
 
-        st = self.stats
-        st["requests"] += len(group)
-        st["steps"] += 1
-        st["recycles_run"] += int(out["n_recycles"][:len(group)].sum())
-        st["recycles_budget"] += self.max_recycle * len(group)
-        pb = st["per_bucket"].setdefault(
-            bucket, {"requests": 0, "steps": 0, "seconds": 0.0})
-        pb["requests"] += len(group)
-        pb["steps"] += 1
-        pb["seconds"] += dt
+        self.bump("requests", len(group))
+        self.bump("steps")
+        self.bump("recycles_run", int(out["n_recycles"][:len(group)].sum()))
+        self.bump("recycles_budget", self.max_recycle * len(group))
+        self.bump_bucket(bucket, requests=len(group), steps=1, seconds=dt)
 
         results = []
         for i, req in enumerate(group):
@@ -256,9 +310,20 @@ class FoldEngine:
             self, policy=policy, clock=clock, step_cost=step_cost,
             cache=cache, featurize_workers=featurize_workers,
             starvation_steps=starvation_steps)
+        snap = self._call_begin()
         try:
             results = sched.serve(requests)
         finally:
             sched.featurizer.close()
+            self._call_end("serve", snap)
         self.last_report = sched.report
+        # scalar report fields become serve/report/* gauges; the full dict
+        # is one event row (latency percentiles, stage means, goodput)
+        for k in ("p50_ms", "p99_ms", "goodput_rps", "deadline_hit_rate"):
+            if isinstance(self.last_report.get(k), (int, float)):
+                self.obs.gauge(f"serve/report/{k}").set(self.last_report[k])
+        self.obs.record("serve/report", {
+            k: v for k, v in self.last_report.items()
+            if isinstance(v, (int, float, str, dict))
+            and k not in ("step_wall_s", "trace")})
         return results

@@ -212,13 +212,16 @@ class ContinuousScheduler:
         return min(live, key=urgency)
 
     def _admit(self, lane: _Lane, now: float, forced: bool) -> List[int]:
+        from repro.obs import trace_span
         key = _fifo_key if self.policy == "fifo" else _order_key
         lane.waiting.sort(key=lambda it: key(it.request))
         admitted = []
-        while lane.waiting and lane.free_slots:
-            item = lane.waiting.pop(0)
-            lane.admit(item, now)
-            admitted.append(item.request.rid)
+        with trace_span("admit", tracer=self.engine.tracer,
+                        bucket=lane.bucket.describe()):
+            while lane.waiting and lane.free_slots:
+                item = lane.waiting.pop(0)
+                lane.admit(item, now)
+                admitted.append(item.request.rid)
         return admitted
 
     # -- stepping ------------------------------------------------------------
@@ -232,12 +235,16 @@ class ContinuousScheduler:
 
     def _run_step(self, lane: _Lane, admitted: List[int],
                   forced: bool) -> None:
+        from repro.obs import trace_span
         eng = self.engine
         t0 = time.perf_counter()
-        carry, out = lane.step(eng.params, lane.batch, lane.carry)
-        # force writable host copies: the lane mutates its carry in place
-        lane.carry = {k: np.array(v) for k, v in carry.items()}
-        out = {k: np.array(v) for k, v in out.items()}
+        with trace_span("recycle_step", tracer=eng.tracer,
+                        bucket=lane.bucket.describe(),
+                        active=lane.n_active):
+            carry, out = lane.step(eng.params, lane.batch, lane.carry)
+            # force writable host copies: the lane mutates its carry in place
+            lane.carry = {k: np.array(v) for k, v in carry.items()}
+            out = {k: np.array(v) for k, v in out.items()}
         wall = time.perf_counter() - t0
         dt = self._cost(lane.bucket, wall)
         self.clock.advance(dt)
@@ -253,12 +260,11 @@ class ContinuousScheduler:
                 other.skipped += 1
         lane.skipped = 0
 
-        eng.stats["steps"] += 1
-        pb = eng.stats["per_bucket"].setdefault(
-            lane.bucket, {"requests": 0, "steps": 0, "seconds": 0.0})
-        pb["steps"] += 1
-        pb["seconds"] += wall
-        self._harvest(lane, out)
+        eng.bump("steps")
+        eng.bump_bucket(lane.bucket, steps=1, seconds=wall)
+        with trace_span("harvest", tracer=eng.tracer,
+                        bucket=lane.bucket.describe()):
+            self._harvest(lane, out)
 
     def _harvest(self, lane: _Lane, out: dict) -> None:
         from repro.serve.fold_engine import FoldResult
@@ -290,10 +296,10 @@ class ContinuousScheduler:
             self.results[req.rid] = res
             if self.cache is not None:
                 self.cache.put(item.digest, res)
-            eng.stats["requests"] += 1
-            eng.stats["recycles_run"] += int(c["n_rec"][j])
-            eng.stats["recycles_budget"] += eng.max_recycle
-            eng.stats["per_bucket"][lane.bucket]["requests"] += 1
+            eng.bump("requests")
+            eng.bump("recycles_run", int(c["n_rec"][j]))
+            eng.bump("recycles_budget", eng.max_recycle)
+            eng.bump_bucket(lane.bucket, requests=1)
             fs.clear_carry_slot(c, j)
             lane.meta[j] = None
 

@@ -189,13 +189,17 @@ class CheckpointManager:
 
     def __init__(self, directory, *, keep: int = 3, async_save: bool = True,
                  install_sigterm: bool = False,
-                 plan_meta: Optional[dict] = None):
+                 plan_meta: Optional[dict] = None, obs=None):
         self.directory = pathlib.Path(directory)
         self.keep = keep
         self.async_save = async_save
         # BuiltPlan.metadata() of the run writing/reading these checkpoints:
         # stamped into every save, cross-checked on every restore
         self.plan_meta = plan_meta
+        # obs MetricRegistry (DESIGN.md §14): save/restore timings land in
+        # ckpt/* series — the snapshot cost on the training thread and the
+        # serialization cost on the worker are separate observables
+        self.obs = obs
         self._thread: Optional[threading.Thread] = None
         self._last_state = None
         self._lock = threading.Lock()
@@ -210,9 +214,15 @@ class CheckpointManager:
                                 meta=self.plan_meta)
         raise SystemExit(143)
 
+    def _record(self, name: str, dt: float, step: int):
+        if self.obs is not None:
+            self.obs.record(name, dt, step=step)
+
     def save(self, step: int, tree):
         # snapshot to host memory NOW (donated buffers may be reused)
+        t0 = time.perf_counter()
         host_tree = jax.tree_util.tree_map(np.asarray, tree)
+        self._record("ckpt/snapshot_s", time.perf_counter() - t0, step)
         with self._lock:
             self._last_state = (step, host_tree)
         if self.async_save:
@@ -224,11 +234,13 @@ class CheckpointManager:
             self._save_and_gc(step, host_tree)
 
     def _save_and_gc(self, step, tree):
+        t0 = time.perf_counter()
         save_checkpoint(self.directory, step, tree, meta=self.plan_meta)
         steps = sorted(int(m.group(1)) for p in self.directory.iterdir()
                        if (m := re.fullmatch(r"step_(\d+)", p.name)))
         for s in steps[:-self.keep]:
             shutil.rmtree(self.directory / f"step_{s:010d}", ignore_errors=True)
+        self._record("ckpt/save_s", time.perf_counter() - t0, step)
 
     def wait(self):
         if self._thread is not None and self._thread.is_alive():
@@ -236,10 +248,13 @@ class CheckpointManager:
 
     def restore_latest(self, tree_like, shardings=None, *,
                        adapt_plan: bool = False):
-        return restore_checkpoint(self.directory, tree_like,
-                                  shardings=shardings,
-                                  expect_meta=self.plan_meta,
-                                  adapt_plan=adapt_plan)
+        t0 = time.perf_counter()
+        out = restore_checkpoint(self.directory, tree_like,
+                                 shardings=shardings,
+                                 expect_meta=self.plan_meta,
+                                 adapt_plan=adapt_plan)
+        self._record("ckpt/restore_s", time.perf_counter() - t0, out[1])
+        return out
 
 
 class StepWatchdog:

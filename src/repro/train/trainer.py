@@ -64,9 +64,12 @@ class TrainRunner:
                  install_sigterm: bool = False,
                  deterministic: bool = False, devices=None,
                  on_straggler=None, data_source=None, data_workers: int = 1,
-                 data_prefetch: int = 2, bucket_by_length: bool = False):
+                 data_prefetch: int = 2, bucket_by_length: bool = False,
+                 obs=None, tracer=None, profile_window=None,
+                 hlo_check: bool = False):
         import jax
         from repro.core import model as af2
+        from repro.obs import MetricRegistry
         from repro.parallel.plan import BuiltPlan, ParallelPlan
         from repro.train import optim as optim_lib
         from repro.train.checkpoint import CheckpointManager, StepWatchdog
@@ -102,6 +105,13 @@ class TrainRunner:
             optim_lib.af2_lr_schedule(1e-3, warmup_steps=100),
             per_sample_clip=0.1)
         self.ema = optim_lib.ema(ema_decay) if ema_decay else None
+        # telemetry (DESIGN.md §14): everything routes through a registry —
+        # a sink-less default keeps the hot path near-free when nobody
+        # listens, while `history` stays a live view of registry series
+        self.obs = obs if obs is not None else MetricRegistry()
+        self.tracer = tracer
+        self.profile_window = profile_window
+        self.hlo_check = hlo_check
 
         step_fn, built = make_af2_train_step(
             cfg, self.optimizer, plan, n_recycle=n_recycle,
@@ -115,6 +125,9 @@ class TrainRunner:
         # calls: step outputs) — that is draw-independent and not a retrace,
         # so it deliberately does not count.
         self._traces = {"train": 0}
+        # the RAW step (no trace counter, no donation): the HLO-inspection
+        # path lowers THIS so `train_compiles` keeps its =1 contract
+        self._raw_step = step_fn
 
         def counted_step(state, batch, rng, nr):
             self._traces["train"] += 1
@@ -133,11 +146,16 @@ class TrainRunner:
         self.step = 0
         self.mgr = (CheckpointManager(ckpt_dir, keep=keep,
                                       install_sigterm=install_sigterm,
-                                      plan_meta=built.metadata())
+                                      plan_meta=built.metadata(),
+                                      obs=self.obs)
                     if ckpt_dir else None)
         self.watchdog = StepWatchdog(on_straggler=on_straggler)
-        self.history = {"loss": [], "n_recycle": [], "step_s": [], "eval": [],
-                        "data": []}
+        # thin views: each value IS the registry's live series list (same
+        # object) — `history["loss"] is obs.series("train/loss")`, so legacy
+        # consumers and sinks observe the identical stream
+        self.history = {k: self.obs.series(f"train/{k}") for k in
+                        ("loss", "n_recycle", "step_s", "eval", "data",
+                         "attribution")}
 
     # -- compile accounting (the FoldEngine contract, training-side) --------
 
@@ -277,7 +295,50 @@ class TrainRunner:
             bucket_by_length=self.bucket_by_length,
             pad_to=(train_bucket(self.cfg) if self.data_source is not None
                     else None),
-            sharding=NamedSharding(self.built.mesh, self.built.batch_spec))
+            sharding=NamedSharding(self.built.mesh, self.built.batch_spec),
+            obs=self.obs, tracer=self.tracer)
+
+    # -- attribution / HLO observables (DESIGN.md §14) -----------------------
+
+    def attribution(self, *, measured_step_s: float, n_recycle: float,
+                    stall_fraction: float = 0.0, overhead_s: float = 0.0,
+                    wall_s: Optional[float] = None,
+                    step: Optional[int] = None) -> dict:
+        """Roofline-vs-measured report for this runner's plan/config —
+        recorded into ``history["attribution"]`` (see obs.attribution)."""
+        from repro.obs import attribution_report
+        rep = attribution_report(
+            self.cfg, self.plan, global_batch=self.batch_size,
+            n_recycle=n_recycle, measured_step_s=measured_step_s,
+            stall_fraction=stall_fraction, overhead_s=overhead_s,
+            wall_s=wall_s, step=step)
+        self.obs.record("train/attribution", rep, step=step)
+        return rep
+
+    def record_async_overlap(self, batch) -> dict:
+        """Promote ``analysis.hlo.check_async_overlap`` to an obs metric:
+        lower the RAW train step (uncounted, undonated — ``train_compiles``
+        stays 1), inspect the optimized HLO for hidden collectives, record
+        the verdict (or the skip reason: CPU backends don't split
+        collectives into start/done pairs) as ``train/async_overlap_ok``."""
+        import jax
+        from repro.analysis.hlo import check_async_overlap
+        try:
+            txt = (jax.jit(self._raw_step)
+                   .lower(self.state, batch, jax.random.PRNGKey(0),
+                          self.max_recycle if self.recycle_sample else None)
+                   .compile().as_text())
+            ok, rep = check_async_overlap(txt)
+        except Exception as e:  # keep training even if lowering fails
+            ok, rep = None, {"error": f"{type(e).__name__}: {e}"}
+        row = {"ok": ok, "skipped": ok is None,
+               "reason": (None if ok is not None else rep.get(
+                   "error", "no async collective start/done pairs in HLO"))}
+        for k in ("pairs", "overlapped", "exposed"):
+            if k in rep:
+                row[k] = rep[k]
+        self.obs.record("train/async_overlap_ok", row, step=self.step)
+        return row
 
     # -- the loop ------------------------------------------------------------
 
@@ -286,55 +347,112 @@ class TrainRunner:
 
         Per step: draw n_recycle on host -> one compiled step (loss, grads,
         optimizer, EMA) -> history.  Every ``eval_every`` steps: lDDT-Cα
-        with the EMA params on the held-out split, logged with throughput
-        and the input pipeline's per-stage stall report.  Returns
-        ``self.history`` (input accounting under ``history["data"]``).
+        with the EMA params on the held-out split, logged with throughput,
+        the input pipeline's per-stage stall report, and the
+        roofline-vs-measured attribution report.  Returns ``self.history``
+        (input accounting under ``history["data"]``, attribution rows under
+        ``history["attribution"]``) — every value a live view of the
+        registry's series (DESIGN.md §14).
         """
         import jax
+        from repro.obs import get_tracer, trace_span
 
         pipeline = self.make_pipeline()
         base_rng = jax.random.PRNGKey(self.seed)
+        tracer = self.tracer if self.tracer is not None else get_tracer()
+        obs = self.obs
+        # cached instruments: dict lookups off the hot path (the pipeline
+        # mirrors its own data/* gauges before each yield)
+        h_step = obs.histogram("train/step_s")
+        c_steps = obs.counter("train/steps")
+        # attribution window: reset at every report so each row attributes
+        # ITS interval (not the run-so-far average)
+        win_t0 = time.perf_counter()
+        win_i0 = len(self.history["step_s"])
+        win_overhead = 0.0
         try:
             for step, batch in pipeline:
                 if step >= steps:
                     break
+                if self.profile_window is not None:
+                    self.profile_window.maybe_start(step)
+                if self.hlo_check and not self.history["step_s"]:
+                    self.record_async_overlap(batch)
                 nr = self.recycle_draw(step)
                 self.watchdog.start_step()
                 # fixed-recycle runs pass None: the factory's static bound
                 # keeps forward's unrolled recycling (no dead while_loop)
-                self.state, metrics = self._train_step(
-                    self.state, batch, jax.random.fold_in(base_rng, step),
-                    nr if self.recycle_sample else None)
-                loss = float(metrics["loss"])   # blocks: step wall-time real
+                with trace_span("step", tracer=tracer, step=step,
+                                n_recycle=nr):
+                    self.state, metrics = self._train_step(
+                        self.state, batch, jax.random.fold_in(base_rng, step),
+                        nr if self.recycle_sample else None)
+                    if tracer is not None:
+                        # host spans must bound device work honestly
+                        jax.block_until_ready(metrics)
+                    loss = float(metrics["loss"])  # blocks: wall-time real
                 self.watchdog.end_step(step)
                 dt = self.watchdog.ema or 0.0
-                self.history["loss"].append(loss)
-                self.history["n_recycle"].append(nr)
-                self.history["step_s"].append(dt)
+                obs.record("train/loss", loss, step=step)
+                obs.record("train/n_recycle", nr, step=step)
+                obs.record("train/step_s", dt, step=step)
+                h_step.observe(dt)
+                c_steps.inc()
                 self.step = step + 1
                 if log_every and step % log_every == 0:
                     log(f"step {step:5d}  loss {loss:.4f}  n_recycle {nr}  "
                         f"({self.batch_size / max(dt, 1e-9):.2f} protein/s)")
                 if self.eval_every and self.step % self.eval_every == 0:
-                    ev = self.evaluate()
-                    self.history["eval"].append(
-                        {"step": self.step, "lddt_ca": ev["lddt_ca"]})
-                    self.history["data"].append(
-                        dict(pipeline.report.as_dict(), step=self.step))
+                    t_ev = time.perf_counter()
+                    with trace_span("eval", tracer=tracer, step=self.step):
+                        ev = self.evaluate()
+                    win_overhead += time.perf_counter() - t_ev
+                    obs.record("train/eval",
+                               {"step": self.step, "lddt_ca": ev["lddt_ca"]},
+                               step=self.step)
+                    obs.record("train/data",
+                               dict(pipeline.report.as_dict(), step=self.step),
+                               step=self.step)
+                    win = self.history["step_s"][win_i0:]
+                    nrs = self.history["n_recycle"][win_i0:]
+                    attr = self.attribution(
+                        measured_step_s=(sum(win) / len(win)) if win else 0.0,
+                        n_recycle=(sum(nrs) / len(nrs)) if nrs else
+                        float(self.n_recycle),
+                        stall_fraction=pipeline.report.stall_fraction,
+                        overhead_s=win_overhead,
+                        wall_s=time.perf_counter() - win_t0, step=self.step)
+                    win_t0 = time.perf_counter()
+                    win_i0 = len(self.history["step_s"])
+                    win_overhead = 0.0
                     if log_every:
                         log(f"  eval @ {self.step}: lDDT-Cα "
                             f"{ev['lddt_ca']:.2f} (ema={self.ema is not None},"
                             f" {self.batch_size / max(dt, 1e-9):.2f}"
                             f" protein/s)")
                         log(f"  {pipeline.report.describe()}")
+                        from repro.obs import describe_attribution
+                        log(f"  {describe_attribution(attr)}")
                 if (self.mgr and self.step % self.ckpt_every == 0
                         and self.step < steps):
-                    self.mgr.save(self.step, self.state)
+                    t_ck = time.perf_counter()
+                    with trace_span("checkpoint", tracer=tracer,
+                                    step=self.step):
+                        self.mgr.save(self.step, self.state)
+                    win_overhead += time.perf_counter() - t_ck
+                obs.tick(step=step)
+                if self.profile_window is not None:
+                    self.profile_window.maybe_stop(step)
         finally:
-            self.history["data"].append(
-                dict(pipeline.report.as_dict(), step=self.step))
+            obs.record("train/data",
+                       dict(pipeline.report.as_dict(), step=self.step),
+                       step=self.step)
             pipeline.close()
+            if self.profile_window is not None:
+                self.profile_window.close()
         if self.mgr:
-            self.mgr.save(self.step, self.state)
-            self.mgr.wait()
+            with trace_span("checkpoint", tracer=tracer, step=self.step):
+                self.mgr.save(self.step, self.state)
+                self.mgr.wait()
+        obs.tick(step=self.step)
         return self.history
