@@ -82,3 +82,24 @@ python -m pytest -x -q -m data
 # ./scripts/run_tier1.sh -m obs
 echo "== tier-1i: telemetry tier (obs registry / spans / attribution) =="
 python -m pytest -x -q -m obs
+
+# tier-1j: the static-analyzer tier (marker: lint) — known-bad fixtures
+# prove every jaxpr/HLO pass FIRES on its bug class (mis-scaled shard_map
+# grad, reused dropout key, unfused OPM, bf16 accumulation, dropped
+# donation, exposed async collective), and `python -m repro.analysis.lint`
+# gates the full train/fold ParallelPlan matrix against the committed
+# LINT_BASELINE.json: any new finding fingerprint fails here.  Also in the
+# main pass; standalone for analyzer-only changes:
+# ./scripts/run_tier1.sh -m lint
+echo "== tier-1j: static-analyzer tier (lint fixtures + plan-matrix gate) =="
+python -m pytest -x -q -m lint
+
+# style half of tier-1j: ruff (config at ruff.toml).  Dev dependency
+# (requirements-dev.txt) — skipped with a notice when the binary is absent,
+# the same graceful-degradation contract the suite applies to hypothesis.
+if command -v ruff >/dev/null 2>&1; then
+  echo "== tier-1j (style): ruff check =="
+  ruff check src tests scripts benchmarks
+else
+  echo "== tier-1j (style): ruff not installed — skipped (pip install -r requirements-dev.txt) =="
+fi

@@ -1,4 +1,4 @@
-"""HLO text parsing: per-op collective byte accounting.
+"""HLO text checks: collective byte accounting + async-overlap verdicts.
 
 ``cost_analysis()`` does not expose collective traffic, so we parse the
 compiled (post-SPMD-partitioning) HLO text and sum operand bytes of every
@@ -8,58 +8,34 @@ Scan caveat (DESIGN.md §7): ops inside ``while`` bodies execute trip-count
 times but appear once in the text.  The roofline harness therefore derives
 per-layer costs from reduced-depth *unrolled* lowerings and extrapolates;
 ``parse_hlo_collectives`` itself reports static (once-counted) bytes.
+
+Line-level parsing lives in ``analysis.static.hlo_walk`` (DESIGN.md §15),
+shared with the static-analysis pass suite.
 """
 from __future__ import annotations
 
-import re
 from collections import defaultdict
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
-    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
-    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
-    "c64": 8, "c128": 16,
-}
+from repro.analysis.static.hlo_walk import (
+    DTYPE_BYTES as _DTYPE_BYTES,           # re-exported for compat
+    iter_instructions,
+    shape_bytes as _shape_bytes,
+)
 
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-# e.g.:  %all-reduce.5 = bf16[16,4096]{1,0} all-reduce(%x), replica_groups=...
-#        ... = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-to-all(...)
-_OP_RE = re.compile(
-    r"=\s*(\(?[a-z0-9_\[\],{}\s/#*]*\)?)\s*"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\(")
-_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
-
-
-def _shape_bytes(shape_text: str) -> int:
-    total = 0
-    for dtype, dims in _SHAPE_RE.findall(shape_text):
-        if dtype not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dtype]
-    return total
+_COLLECTIVES = frozenset({"all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute"})
 
 
 def parse_hlo_collectives(hlo_text: str) -> dict:
     """Sum output bytes per collective kind. '-done' ops are skipped so async
     start/done pairs count once."""
     out: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
-    for line in hlo_text.splitlines():
-        if "-done(" in line:
+    for instr in iter_instructions(hlo_text):
+        kind = instr.base_opcode
+        if kind not in _COLLECTIVES or instr.is_async_done:
             continue
-        m = _OP_RE.search(line)
-        if not m:
-            continue
-        shape_text, kind = m.group(1), m.group(2)
-        b = _shape_bytes(shape_text)
         out[kind]["count"] += 1
-        out[kind]["bytes"] += b
+        out[kind]["bytes"] += instr.nbytes()
     return dict(out)
 
 
@@ -70,10 +46,6 @@ def collective_bytes(hlo_text: str) -> int:
 # ---------------------------------------------------------------------------
 # Async-collective overlap check (ROADMAP item 2 / PR 6's compiler half)
 # ---------------------------------------------------------------------------
-
-# instruction line: `%name = <shape> opcode(...)`; name may carry dots
-_INSTR_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s*([\w\-]+)\(")
 
 # ops that neither compute nor move meaningful data — a start/done pair
 # separated only by these is NOT overlapped, the latency is fully exposed
@@ -104,24 +76,20 @@ def async_collective_gaps(hlo_text: str, kinds=("all-gather",)) -> list:
     ``compute_ops`` counts non-passthrough, non-async ops (fusions, dots,
     element-wise work...), the overlap evidence.
     """
+    kinds = tuple(kinds)
     starts: dict = {}          # %name -> {pair fields, "ops": [...]}
     open_pairs: list = []      # insertion-ordered open windows
     out = []
-    for line in hlo_text.splitlines():
-        m = _INSTR_RE.match(line)
-        if not m:
-            continue
-        name, opcode = m.group(1), m.group(3)
-        if any(opcode == f"{k}-start" for k in kinds):
-            rec = {"name": name, "kind": opcode[:-len("-start")], "ops": []}
-            starts[name] = rec
+    for instr in iter_instructions(hlo_text):
+        if instr.is_async_start and instr.base_opcode in kinds:
+            rec = {"name": instr.name, "kind": instr.base_opcode, "ops": []}
+            starts[instr.name] = rec
             open_pairs.append(rec)
             continue
-        done_kind = next((k for k in kinds if opcode == f"{k}-done"), None)
-        if done_kind is not None:
-            # the done's operand names its start: `...-done(%<start-name>)`
-            operand = re.search(r"\(%?([\w.\-]+)", line)
-            rec = starts.pop(operand.group(1), None) if operand else None
+        if instr.is_async_done and instr.base_opcode in kinds:
+            # the done's first operand names its start: `...-done(%<start>)`
+            rec = starts.pop(instr.operands[0], None) if instr.operands \
+                else None
             if rec is not None:
                 open_pairs.remove(rec)
                 gap = rec.pop("ops")
@@ -131,7 +99,7 @@ def async_collective_gaps(hlo_text: str, kinds=("all-gather",)) -> list:
                 out.append(rec)
             continue
         for rec in open_pairs:
-            rec["ops"].append(opcode)
+            rec["ops"].append(instr.opcode)
     return out
 
 

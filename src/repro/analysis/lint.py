@@ -1,0 +1,161 @@
+"""Static-analysis gate: lower the real train/fold steps for every
+ParallelPlan and run the jaxpr/HLO pass suite (DESIGN.md §15).
+
+    python -m repro.analysis.lint                    # full matrix, gated
+    python -m repro.analysis.lint --only train:dap2  # substring filter
+    python -m repro.analysis.lint --hlo              # also compile -> HLO
+    python -m repro.analysis.lint --list             # show matrix + passes
+    python -m repro.analysis.lint --write-baseline   # accept current findings
+
+The gate: every finding's fingerprint is looked up in the committed
+baseline (``LINT_BASELINE.json``).  Unwaived findings exit 1 — a new
+finding fails CI until it is either fixed or explicitly waived with a
+reason.  Stale waivers (fingerprints no run produces anymore) are warned
+about so the baseline never accretes dead entries.
+
+The full report (stats, waived findings, per-pass results) is written to
+``experiments/lint/report.json`` for EXPERIMENTS.md to cite.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+DEFAULT_BASELINE = _REPO_ROOT / "LINT_BASELINE.json"
+DEFAULT_REPORT = _REPO_ROOT / "experiments" / "lint" / "report.json"
+
+
+def load_baseline(path: Path) -> dict:
+    if not path.exists():
+        return {"version": 1, "waivers": {}}
+    data = json.loads(path.read_text())
+    if data.get("version") != 1:
+        raise SystemExit(f"lint: unsupported baseline version in {path}")
+    return data
+
+
+def run_lint(*, only=None, with_hlo=False) -> "Report":
+    # imports deferred: main() must set XLA_FLAGS before jax loads
+    from repro.analysis.static import all_passes
+    from repro.analysis.static.core import Report
+    from repro.analysis.static.program import capture_all
+
+    import jax
+
+    report = Report(meta={"jax": jax.__version__,
+                          "n_devices": jax.device_count(),
+                          "backend": jax.default_backend(),
+                          "with_hlo": bool(with_hlo),
+                          "only": only or ""})
+    passes = all_passes()
+    for prog in capture_all(with_hlo=with_hlo, only=only):
+        results = [p.run(prog) for p in passes]
+        n = sum(len(r.findings) for r in results)
+        print(f"  {prog.name:20s} {'clean' if n == 0 else f'{n} findings'}"
+              + "".join(f" [{r.pass_name}: skipped — {r.skip_reason}]"
+                        for r in results if r.skipped),
+              file=sys.stderr)
+        report.extend(results)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static analyzer over the ParallelPlan program matrix")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on program names "
+                         "(e.g. 'train:dap2', 'fold:')")
+    ap.add_argument("--hlo", action="store_true",
+                    help="also compile each program and run the HLO passes "
+                         "(donation/overlap); slower")
+    ap.add_argument("--report", type=Path, default=DEFAULT_REPORT,
+                    help="where to write the JSON report")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="waiver file (fingerprint -> reason)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="waive all current findings (new entries get a "
+                         "placeholder reason to fill in) and rewrite the "
+                         "baseline")
+    ap.add_argument("--list", action="store_true",
+                    help="list the program matrix and passes, then exit")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="fake host devices to lower against (default 8)")
+    args = ap.parse_args(argv)
+
+    # Must happen before anything imports jax.
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.devices}")
+
+    if args.list:
+        from repro.analysis.static import all_passes
+        from repro.analysis.static.program import (fold_plan_matrix,
+                                                   train_plan_matrix)
+        print("programs:")
+        for name, plan, clip in train_plan_matrix():
+            extra = f" per_sample_clip={clip}" if clip is not None else ""
+            print(f"  train:{name:12s} {plan.describe()}{extra}")
+        for name, plan, dtype in fold_plan_matrix():
+            print(f"  fold:{name:13s} {plan.describe()} dtype={dtype}")
+        print("passes:")
+        for p in all_passes():
+            print(f"  {p.name}")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    waivers = dict(baseline.get("waivers", {}))
+
+    report = run_lint(only=args.only, with_hlo=args.hlo)
+    unwaived, waived = report.partition(waivers)
+
+    live = {f.fingerprint for f in report.findings}
+    stale = sorted(set(waivers) - live)
+    # A filtered run sees only a slice of the matrix — fingerprints from
+    # other programs are not stale, just out of scope.
+    if stale and not args.only:
+        for fp in stale:
+            print(f"lint: stale waiver {fp}: {waivers[fp]!r} "
+                  "(no program produces it anymore)", file=sys.stderr)
+
+    if args.write_baseline:
+        new = {f.fingerprint: waivers.get(
+                   f.fingerprint, f"UNREVIEWED: {f.code} in {f.program} — "
+                                  "replace with a real justification")
+               for f in report.findings}
+        if not args.only:   # full run: drop stale entries
+            waivers = new
+        else:               # partial run: merge, keep out-of-scope waivers
+            waivers.update(new)
+        args.baseline.write_text(json.dumps(
+            {"version": 1, "waivers": waivers}, indent=2, sort_keys=True)
+            + "\n")
+        print(f"lint: wrote {len(waivers)} waivers to {args.baseline}",
+              file=sys.stderr)
+        unwaived, waived = report.partition(waivers)
+
+    args.report.parent.mkdir(parents=True, exist_ok=True)
+    args.report.write_text(json.dumps(report.to_dict(waivers), indent=2,
+                                      sort_keys=True) + "\n")
+
+    s = report.to_dict(waivers)["summary"]
+    print(f"lint: {s['n_programs']} programs, {s['n_pass_runs']} pass runs "
+          f"({s['n_skipped']} skipped), {s['n_findings']} findings "
+          f"({s['n_waived']} waived, {s['n_unwaived']} unwaived)")
+    for f in unwaived:
+        print(f"  UNWAIVED [{f.severity}] {f.fingerprint} "
+              f"{f.pass_name}/{f.code} {f.program}: {f.message}")
+    if unwaived:
+        print("lint: FAIL — fix the findings above or waive them with a "
+              f"reason in {args.baseline.name}", file=sys.stderr)
+        return 1
+    print("lint: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

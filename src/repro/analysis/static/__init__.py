@@ -1,0 +1,38 @@
+"""Static-analysis pass suite over jaxpr/HLO programs (DESIGN.md §15).
+
+Five passes, each generalizing a bug class this repo actually hit:
+
+  materialization — fused-OPM / tri-mult / attention peak-intermediate
+                    guarantees (the ad-hoc jaxpr assertions, unified)
+  collectives     — per-mesh-axis psum/all_gather/all_to_all audit with a
+                    self-calibrating gradient-completion check (PR-2 class)
+  precision       — bf16 dot_generals without fp32 accumulation, stray f64,
+                    low-precision layernorm
+  rng             — PRNG keys consumed twice / not folded per loop step
+                    (PR-5 class)
+  retrace         — weak-type retrace hazards + donated-but-unaliased
+                    buffers + exposed async collectives
+
+Run them all: ``python -m repro.analysis.lint``.  Waivers live in
+``LINT_BASELINE.json`` at the repo root; any finding whose fingerprint is
+not waived fails the run.
+"""
+from repro.analysis.static.core import (  # noqa: F401
+    Finding, PassResult, Program, Report,
+)
+from repro.analysis.static import jaxpr_walk, hlo_walk  # noqa: F401
+
+
+def all_passes():
+    """Instantiate the full pass suite (import deferred so jaxpr_walk /
+    hlo_walk stay importable without the pass deps)."""
+    from repro.analysis.static.passes import (
+        materialization, collectives, precision, rng, retrace,
+    )
+    return [
+        materialization.MaterializationPass(),
+        collectives.CollectivesPass(),
+        precision.PrecisionPass(),
+        rng.RngPass(),
+        retrace.RetracePass(),
+    ]

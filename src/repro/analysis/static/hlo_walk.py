@@ -1,0 +1,109 @@
+"""Shared HLO-text traversal (DESIGN.md §15).
+
+One tolerant line-parser for the HLO dumps that both the legacy
+``analysis/hlo.py`` checks and the static passes walk.  HLO text format
+is not a stable API, so everything here is best-effort: a line that does
+not parse yields nothing rather than raising.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterator, List, Optional
+
+# `%name = shape opcode(operands...)`; name may carry dots/dashes, shape may
+# be a tuple `(f32[..], ..)`.  ROOT prefix optional.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(?.*?\)?)\s*([\w\-]+)\((.*)$"
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+
+def shape_bytes(shape_text: str) -> int:
+    """Total bytes of every typed shape in a shape string (tuple shapes sum
+    their elements; unknown dtypes are skipped)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class HloInstr:
+    name: str
+    opcode: str
+    shape_text: str
+    operands: tuple        # %-operand names appearing after the open paren
+    line: str
+    lineno: int
+
+    def shapes(self) -> List[tuple]:
+        """[(dtype, (dims...)), ...] for every typed shape on the LHS."""
+        out = []
+        for dt, dims in _SHAPE_RE.findall(self.shape_text):
+            if dt not in DTYPE_BYTES:
+                continue
+            shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+            out.append((dt, shape))
+        return out
+
+    def nbytes(self) -> int:
+        return shape_bytes(self.shape_text)
+
+    @property
+    def base_opcode(self) -> str:
+        """Opcode with any async -start/-done suffix stripped."""
+        for suf in ("-start", "-done"):
+            if self.opcode.endswith(suf):
+                return self.opcode[:-len(suf)]
+        return self.opcode
+
+    @property
+    def is_async_start(self) -> bool:
+        return self.opcode.endswith("-start")
+
+    @property
+    def is_async_done(self) -> bool:
+        return self.opcode.endswith("-done")
+
+
+def iter_instructions(hlo_text: str) -> Iterator[HloInstr]:
+    """Yield an ``HloInstr`` per parseable instruction line, in order
+    (HLO prints each computation contiguously, so order is program order
+    within a computation)."""
+    for lineno, line in enumerate(hlo_text.splitlines()):
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_text, opcode, rest = m.groups()
+        operands = tuple(_OPERAND_RE.findall(rest))
+        yield HloInstr(name=name, opcode=opcode, shape_text=shape_text,
+                       operands=operands, line=line, lineno=lineno)
+
+
+def count_donated_params(hlo_text: str) -> Optional[int]:
+    """Number of distinct parameters the module's ``input_output_alias``
+    header marks donated; None when the text carries no alias header at all
+    (XLA:CPU drops donation — callers should skip rather than flag)."""
+    m = re.search(r"input_output_alias=\{(.*)", hlo_text)
+    if m is None:
+        return None
+    # single-line header; entries look like "{out_idx}: (param, {idx}, kind)"
+    # — the braces inside entries mean "cut at the first '}'" would truncate
+    # mid-entry, so take the whole line and count the (param, ... tuples
+    body = m.group(1).splitlines()[0]
+    return len({int(p) for p in re.findall(r"\(\s*(\d+)\s*,", body)})

@@ -1,0 +1,92 @@
+"""Pass 2: collective / gradient-scaling audit (the PR-2 bug class).
+
+Counts psum / all_gather / all_to_all per mesh axis in the forward and the
+full train step, and checks that PARTIAL gradients get their completing
+psum over every branch/dap sync axis.
+
+The subtle part (verified empirically, DESIGN.md §15): *psum transposes to
+psum* under shard_map autodiff, so the buggy no-completion program ALSO has
+more psums in its backward than its forward — absolute counts prove
+nothing.  The audit is therefore self-calibrating: program capture lowers a
+``grad_nocomplete`` baseline — the same shard_map'd loss gradient with the
+completing psum deliberately omitted (the PR-2 bug reconstructed as the
+null hypothesis) — and the real step must carry strictly MORE psums over
+each sync axis than that baseline.  Equality means the completion is
+missing.
+"""
+from __future__ import annotations
+
+from repro.analysis.static.core import Finding, PassResult, Program
+from repro.analysis.static.jaxpr_walk import collective_axis_counts
+
+
+def _by_axis(counts, prim="psum"):
+    out = {}
+    for (p, axis), n in counts.items():
+        if p == prim:
+            out[axis] = out.get(axis, 0) + n
+    return out
+
+
+class CollectivesPass:
+    name = "collectives"
+
+    def run(self, program: Program) -> PassResult:
+        step = program.jaxprs.get("step")
+        if step is None:
+            return PassResult(self.name, program.name, [], skipped=True,
+                              skip_reason="no step jaxpr captured")
+        sync_axes = tuple(program.meta.get("sync_axes", ()))
+        dp_axes = tuple(program.meta.get("dp_axes", ()))
+        step_counts = collective_axis_counts(step)
+        stats = {"step": {f"{p}@{a}": n
+                          for (p, a), n in sorted(step_counts.items())}}
+        fwd = program.jaxprs.get("fwd")
+        if fwd is not None:
+            stats["fwd"] = {f"{p}@{a}": n for (p, a), n in
+                            sorted(collective_axis_counts(fwd).items())}
+        findings = []
+
+        baseline = program.jaxprs.get("grad_nocomplete")
+        if program.kind != "train":
+            # completion is a gradient concept; inference psums are layer
+            # collectives with nothing to complete
+            sync_axes = ()
+        if baseline is not None and sync_axes:
+            base_counts = collective_axis_counts(baseline)
+            stats["grad_nocomplete"] = {
+                f"{p}@{a}": n for (p, a), n in sorted(base_counts.items())}
+            step_psum = _by_axis(step_counts)
+            base_psum = _by_axis(base_counts)
+            for axis in sync_axes:
+                if step_psum.get(axis, 0) <= base_psum.get(axis, 0):
+                    findings.append(Finding(
+                        self.name, "GRAD_COMPLETION_MISSING", "error",
+                        program.name,
+                        f"step has {step_psum.get(axis, 0)} psums over sync "
+                        f"axis '{axis}' — no more than the no-completion "
+                        f"baseline ({base_psum.get(axis, 0)}): PARTIAL "
+                        "gradients are never completed "
+                        "(complete_partial_grads, DESIGN.md §2)",
+                        detail={"axis": axis,
+                                "step_psum": step_psum.get(axis, 0),
+                                "baseline_psum": base_psum.get(axis, 0)},
+                        detail_key={"axis": axis}))
+        elif sync_axes:
+            return PassResult(self.name, program.name, [], skipped=True,
+                              skip_reason="sync axes present but no "
+                                          "grad_nocomplete baseline captured",
+                              stats=stats)
+
+        if program.kind == "train":
+            step_psum = _by_axis(step_counts)
+            for axis in dp_axes:
+                if step_psum.get(axis, 0) == 0:
+                    findings.append(Finding(
+                        self.name, "DP_GRAD_REDUCE_MISSING", "error",
+                        program.name,
+                        f"train step has NO psum over data-parallel axis "
+                        f"'{axis}': gradients are never reduced across "
+                        "replicas",
+                        detail={"axis": axis}, detail_key={"axis": axis}))
+        return PassResult(self.name, program.name, findings, stats=stats)

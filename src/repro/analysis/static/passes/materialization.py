@@ -1,0 +1,159 @@
+"""Pass 1: materialization lint — the fused-kernel memory guarantees.
+
+Generalizes the ad-hoc jaxpr assertions that used to live in
+tests/test_triangle.py / test_attention.py / test_analysis.py: walk every
+eqn output aval and assert
+
+  * no ``(r, r, c_opm^2)`` outer-product tensor (fused OPM, DESIGN.md §5)
+  * no ``(r, r, 2*c_mul)`` gated-projection pair (chunked tri-mult, §6)
+  * no full ``(..., h, S, S)`` attention-score/bias tensor when the config
+    chunks attention at ``attention_chunk < S``
+
+The element-count thresholds come from the *config under analysis*, so the
+lint CLI runs a dedicated config whose thresholds sit strictly above every
+legitimate intermediate (see program.py: LINT_CFG_NOTES).
+"""
+from __future__ import annotations
+
+from repro.analysis.static.core import Finding, PassResult, Program
+from repro.analysis.static.jaxpr_walk import aval_elems, iter_out_avals
+
+
+def _opm_shape(c):
+    """The outer-product tensor ends in (c, c) or a flattened c*c."""
+    def match(shape):
+        return (len(shape) >= 2 and shape[-2:] == (c, c)) or \
+               (len(shape) >= 1 and shape[-1] == c * c)
+    return match
+
+
+def _tri_shape(c_mul):
+    """The gated-projection pair ends in the concatenated 2*c_mul channel."""
+    def match(shape):
+        return len(shape) >= 1 and shape[-1] == 2 * c_mul
+    return match
+
+
+def size_thresholds(cfg) -> list:
+    """[(label, threshold_elems, shape_match, code)] for every fused-impl
+    guarantee the config promises.  Only impls that make the promise are
+    checked — a 'naive'/'reference' config legitimately materializes the big
+    tensor.  ``shape_match`` pins the finding to tensors that actually
+    instantiate the guarantee's channel layout, so an unrelated large
+    intermediate never cross-fires every threshold at once."""
+    out = []
+    r = cfg.n_res
+    for sname, e in (("evoformer", cfg.evoformer), ("extra", cfg.extra)):
+        if e.opm_impl == "fused":
+            out.append((f"{sname}.opm_outer",
+                        r * r * e.c_hidden_opm ** 2,
+                        _opm_shape(e.c_hidden_opm),
+                        "OPM_OUTER_MATERIALIZED"))
+        if e.tri_mult_impl in ("chunked", "pallas"):
+            out.append((f"{sname}.tri_gated_pair",
+                        r * r * 2 * e.c_hidden_mul,
+                        _tri_shape(e.c_hidden_mul),
+                        "TRIMULT_PAIR_MATERIALIZED"))
+    return out
+
+
+def find_oversized_avals(closed_jaxpr, thresholds) -> list:
+    """All (label, code, shape, elems, path) where an eqn output meets or
+    exceeds a threshold AND matches that guarantee's channel layout; deduped
+    by (code, shape)."""
+    hits = {}
+    for aval, eqn, path in iter_out_avals(closed_jaxpr):
+        n = aval_elems(aval)
+        shape = tuple(getattr(aval, "shape", ()) or ())
+        for label, thr, match, code in thresholds:
+            if n >= thr and match(shape):
+                key = (code, shape)
+                if key not in hits:
+                    hits[key] = (label, code, shape, n, path)
+    return list(hits.values())
+
+
+def find_full_score_avals(closed_jaxpr, *, heads, extents,
+                          chunk_by_extent) -> list:
+    """Full attention-score tensors: dot_general outputs shaped
+    ``(..., h, S, S)`` with h a known head count and S a chunked sequence
+    extent larger than its chunk.  Chunked attention only ever builds
+    ``(..., h, q_chunk, S)`` slabs, so a square trailing block is the
+    signature of an unchunked q·k score matrix.  Restricting to dot_general
+    producers is what keeps the pair-derived bias out: the legitimate
+    ``(h, r, r)`` bias is born from a dense-then-transpose (and gets
+    scan-stacked per block), never from a q·k contraction."""
+    heads = set(heads)
+    hits = {}
+    for aval, eqn, path in iter_out_avals(closed_jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        shape = tuple(getattr(aval, "shape", ()) or ())
+        if len(shape) < 3:
+            continue
+        h, q, k = shape[-3:]
+        if h not in heads or q != k or k not in chunk_by_extent:
+            continue
+        if k <= chunk_by_extent[k]:
+            continue   # chunk covers the whole extent: full scores are fine
+        key = shape
+        if key not in hits:
+            hits[key] = (shape, aval_elems(aval), path)
+    return list(hits.values())
+
+
+def attention_chunk_map(cfg) -> dict:
+    """extent -> chunk for every (stack, axis) attention the config chunks."""
+    out = {}
+    for e, s_extent in ((cfg.evoformer, cfg.n_seq), (cfg.extra, cfg.n_extra_seq)):
+        if e.attention_impl != "chunked":
+            continue
+        for extent in (cfg.n_res, s_extent):
+            # two stacks may share an extent: keep the smaller chunk (stricter)
+            out[extent] = min(out.get(extent, e.attention_chunk),
+                              e.attention_chunk)
+    return out
+
+
+class MaterializationPass:
+    name = "materialization"
+
+    def run(self, program: Program) -> PassResult:
+        cfg = program.meta.get("cfg")
+        roles = [r for r in ("fwd", "step") if r in program.jaxprs]
+        if cfg is None or not roles:
+            return PassResult(self.name, program.name, [], skipped=True,
+                              skip_reason="no cfg/jaxpr captured")
+        thresholds = size_thresholds(cfg)
+        heads = {cfg.evoformer.n_head_msa, cfg.evoformer.n_head_pair,
+                 cfg.extra.n_head_msa, cfg.extra.n_head_pair}
+        chunks = attention_chunk_map(cfg)
+        findings, peaks = [], {}
+        for role in roles:
+            jx = program.jaxprs[role]
+            peak = 0
+            for label, code, shape, n, path in find_oversized_avals(
+                    jx, thresholds):
+                findings.append(Finding(
+                    self.name, code, "error", program.name,
+                    f"{role}: intermediate {shape} ({n} elems) reaches the "
+                    f"{label} bound the fused impl promises to avoid",
+                    detail={"role": role, "shape": list(shape), "elems": n,
+                            "where": path, "guarantee": label},
+                    detail_key={"role": role, "guarantee": label}))
+            for shape, n, path in find_full_score_avals(
+                    jx, heads=heads, extents=set(chunks), chunk_by_extent=chunks):
+                findings.append(Finding(
+                    self.name, "FULL_ATTENTION_SCORES", "error", program.name,
+                    f"{role}: full attention-score tensor {shape} "
+                    f"materialized despite attention_chunk={chunks[shape[-1]]}",
+                    detail={"role": role, "shape": list(shape), "elems": n,
+                            "where": path},
+                    detail_key={"role": role, "extent": shape[-1]}))
+            for aval, _, _ in iter_out_avals(jx):
+                peak = max(peak, aval_elems(aval))
+            peaks[role] = peak
+        return PassResult(self.name, program.name, findings,
+                          stats={"peak_eqn_elems": peaks,
+                                 "thresholds": {lbl: thr for lbl, thr, _, _ in
+                                                thresholds}})

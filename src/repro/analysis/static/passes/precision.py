@@ -1,0 +1,158 @@
+"""Pass 3: mixed-precision lint.
+
+Three checks, all jaxpr-level:
+
+  BF16_ACCUM          — a forward dot_general contracting over a *sequence*
+                        extent (r / s / s_extra) with 16-bit inputs AND a
+                        16-bit output: the contraction accumulates in low
+                        precision exactly where error grows with sequence
+                        length.  Channel-dim contractions are fine in bf16 —
+                        that IS the mixed-precision policy — so only the
+                        extents the config declares are flagged, and only
+                        when the OUTPUT also retains a sequence dim: a dot
+                        whose output is purely channel-shaped is a weight
+                        gradient, which contracts over every example dim by
+                        construction and is bf16 by AMP design.  Scope is the
+                        ``fwd`` role only: JAX's dot transpose rule does not
+                        inherit ``preferred_element_type``, so backward
+                        cotangent dots accumulate in bf16 regardless of the
+                        primal's request — fixing that needs a custom_vjp per
+                        kernel and is out of scope for a lint (the fused
+                        tri-mult / OPM / attention / IPA forward paths all
+                        carry ``preferred_element_type=f32``).
+  F64_PRESENT         — any float64 eqn output: nothing in AF2 training
+                        wants f64; its presence means an accidental x64
+                        upcast that doubles bytes everywhere downstream.
+  LOW_PRECISION_NORM  — rsqrt/sqrt on a 16-bit tensor: the layernorm
+                        variance path must upcast to f32 first
+                        (nn.layers.layernorm does; hand-rolled norms that
+                        don't are the bug class).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.static.core import Finding, PassResult, Program
+from repro.analysis.static.jaxpr_walk import iter_eqns
+
+_LOW = ("bfloat16", "float16")
+
+
+def _dtype(aval) -> str:
+    return str(getattr(aval, "dtype", ""))
+
+
+def contraction_extents(eqn) -> tuple:
+    """Sizes of the lhs contraction dims of a dot_general eqn."""
+    (lhs_c, _), _ = eqn.params["dimension_numbers"]
+    shape = eqn.invars[0].aval.shape
+    return tuple(int(shape[d]) for d in lhs_c)
+
+
+def find_low_precision_contractions(closed_jaxpr, *, extents,
+                                    require_extent_out=False) -> list:
+    """dot_generals contracting over one of ``extents`` whose inputs and
+    output are all 16-bit (i.e. no fp32 accumulation requested).  With
+    ``require_extent_out`` the output shape must also retain one of the
+    extents — filters out weight-gradient dots, which by construction
+    contract away every sequence dim."""
+    extents = set(int(e) for e in extents)
+    hits = []
+    for eqn, path in iter_eqns(closed_jaxpr):
+        if eqn.primitive.name != "dot_general":
+            continue
+        in_dts = [_dtype(v.aval) for v in eqn.invars]
+        out_dt = _dtype(eqn.outvars[0].aval)
+        if not all(dt in _LOW for dt in in_dts) or out_dt not in _LOW:
+            continue
+        out_shape = tuple(eqn.outvars[0].aval.shape)
+        if require_extent_out and not any(d in extents for d in out_shape):
+            continue
+        hit = [e for e in contraction_extents(eqn) if e in extents]
+        if hit:
+            hits.append((hit, tuple(eqn.invars[0].aval.shape),
+                         out_shape, out_dt, path))
+    return hits
+
+
+def find_f64(closed_jaxpr) -> list:
+    hits = []
+    for eqn, path in iter_eqns(closed_jaxpr):
+        for v in eqn.outvars:
+            if _dtype(v.aval) == "float64":
+                hits.append((eqn.primitive.name,
+                             tuple(getattr(v.aval, "shape", ())), path))
+    return hits
+
+
+def find_low_precision_norms(closed_jaxpr) -> list:
+    hits = []
+    for eqn, path in iter_eqns(closed_jaxpr):
+        if eqn.primitive.name not in ("rsqrt", "sqrt"):
+            continue
+        aval = eqn.invars[0].aval
+        if _dtype(aval) in _LOW and np.ndim(aval) >= 1 \
+                and getattr(aval, "shape", ()) != ():
+            hits.append((eqn.primitive.name, tuple(aval.shape), path))
+    return hits
+
+
+class PrecisionPass:
+    name = "precision"
+
+    def run(self, program: Program) -> PassResult:
+        cfg = program.meta.get("cfg")
+        roles = [r for r in ("fwd", "step") if r in program.jaxprs]
+        if not roles:
+            return PassResult(self.name, program.name, [], skipped=True,
+                              skip_reason="no jaxpr captured")
+        extents = program.meta.get("seq_extents")
+        if extents is None and cfg is not None:
+            extents = (cfg.n_res, cfg.n_seq, cfg.n_extra_seq)
+        findings, stats = [], {}
+        for role in roles:
+            jx = program.jaxprs[role]
+            if extents and role == "fwd":
+                dedup = {}
+                for hit, in_shape, out_shape, dt, path in \
+                        find_low_precision_contractions(
+                            jx, extents=extents, require_extent_out=True):
+                    key = (tuple(hit), in_shape, out_shape)
+                    if key in dedup:
+                        dedup[key]["count"] += 1
+                        continue
+                    dedup[key] = {"role": role, "extents": list(hit),
+                                  "in_shape": list(in_shape),
+                                  "out_shape": list(out_shape),
+                                  "where": path, "dtype": dt, "count": 1}
+                for (hit, in_shape, out_shape), det in dedup.items():
+                    findings.append(Finding(
+                        self.name, "BF16_ACCUM", "error", program.name,
+                        f"{role}: dot_general contracts over sequence extent "
+                        f"{list(hit)} with {det['dtype']} accumulation "
+                        f"({in_shape} -> {out_shape}, x{det['count']}); pass "
+                        "preferred_element_type=float32",
+                        detail=det,
+                        detail_key={"role": role, "extents": list(hit),
+                                    "out_shape": list(out_shape)}))
+            for prim, shape, path in find_f64(jx):
+                findings.append(Finding(
+                    self.name, "F64_PRESENT", "error", program.name,
+                    f"{role}: {prim} produces float64 {shape} — accidental "
+                    "x64 upcast",
+                    detail={"role": role, "prim": prim, "shape": list(shape),
+                            "where": path},
+                    detail_key={"role": role, "prim": prim}))
+            for prim, shape, path in find_low_precision_norms(jx):
+                findings.append(Finding(
+                    self.name, "LOW_PRECISION_NORM", "warning", program.name,
+                    f"{role}: {prim} on 16-bit tensor {shape} — variance/"
+                    "norm paths should upcast to f32 first",
+                    detail={"role": role, "prim": prim, "shape": list(shape),
+                            "where": path},
+                    detail_key={"role": role, "prim": prim,
+                                "shape": list(shape)}))
+            stats[role] = {"n_dot_general": sum(
+                1 for e, _ in iter_eqns(jx)
+                if e.primitive.name == "dot_general")}
+        return PassResult(self.name, program.name, findings, stats=stats)

@@ -1,0 +1,103 @@
+"""Pass 5: retrace / donation / overlap lint.
+
+Jaxpr half:
+  WEAK_TYPE_INPUT        — a step input traced with weak_type=True: calling
+                           with a Python scalar vs an array of the same
+                           dtype gives distinct cache keys, i.e. silent
+                           recompiles of a minutes-long AF2 step.
+  STATIC_RECYCLE_RETRACE — the step was built with a static recycle bound
+                           while the launcher draws stochastic recycle
+                           counts: every distinct draw compiles its own
+                           step (DESIGN.md §11's traced-bound fix).
+
+HLO half (skips cleanly when no HLO was captured, or on backends that
+drop the relevant machinery — XLA:CPU ignores donation and does not split
+collectives):
+  DONATED_NOT_ALIASED    — donate_argnums declared but the compiled module
+                           aliases none of them: peak memory silently
+                           doubles.
+  EXPOSED_COLLECTIVE     — an overlap_dap plan whose async collectives have
+                           no compute in their start/done window (reuses
+                           analysis.hlo.check_async_overlap, itself built
+                           on the shared hlo_walk).
+"""
+from __future__ import annotations
+
+from repro.analysis.static.core import Finding, PassResult, Program
+from repro.analysis.static.hlo_walk import count_donated_params
+
+
+class RetracePass:
+    name = "retrace"
+
+    def run(self, program: Program) -> PassResult:
+        findings, stats = [], {}
+        step = program.jaxprs.get("step")
+        if step is not None:
+            for i, aval in enumerate(getattr(step, "in_avals", []) or []):
+                if getattr(aval, "weak_type", False):
+                    findings.append(Finding(
+                        self.name, "WEAK_TYPE_INPUT", "warning", program.name,
+                        f"step input #{i} ({getattr(aval, 'dtype', '?')}"
+                        f"{list(getattr(aval, 'shape', []))}) is weak-typed: "
+                        "Python-scalar callers will retrace; pass "
+                        "jnp.asarray(..., dtype) instead",
+                        detail={"arg_index": i,
+                                "dtype": str(getattr(aval, "dtype", "?"))},
+                        detail_key={"arg_index": i}))
+        if program.meta.get("static_n_recycle") and \
+                program.meta.get("stochastic_recycling"):
+            findings.append(Finding(
+                self.name, "STATIC_RECYCLE_RETRACE", "error", program.name,
+                "step compiled with a static recycle bound under stochastic "
+                "recycling: every distinct draw recompiles; pass the traced "
+                "n_recycle argument (DESIGN.md §11)",
+                detail={}, detail_key={}))
+
+        hlo = program.hlo_text
+        if hlo is None:
+            stats["hlo"] = "not captured (jaxpr-only program)"
+        else:
+            if program.meta.get("donate_argnums"):
+                n = count_donated_params(hlo)
+                if program.meta.get("backend") == "cpu":
+                    # XLA:CPU drops donation wholesale (alias table present
+                    # but empty) — indistinguishable from the bug, so the
+                    # check only means something on accelerator backends
+                    stats["donation"] = ("skipped: XLA:CPU drops donation "
+                                         f"(alias count={n})")
+                elif n is None:
+                    stats["donation"] = ("skipped: backend kept no alias "
+                                         "header")
+                elif n == 0:
+                    findings.append(Finding(
+                        self.name, "DONATED_NOT_ALIASED", "error",
+                        program.name,
+                        f"donate_argnums={program.meta['donate_argnums']} "
+                        "declared but the compiled module aliases no "
+                        "parameter: donation silently dropped, peak memory "
+                        "doubles",
+                        detail={"donate_argnums":
+                                list(program.meta["donate_argnums"])},
+                        detail_key={}))
+                else:
+                    stats["donation"] = f"{n} params aliased"
+            if program.meta.get("expect_overlap"):
+                from repro.analysis.hlo import check_async_overlap
+                ok, rep = check_async_overlap(hlo)
+                if ok is None:
+                    stats["overlap"] = ("skipped: backend does not split "
+                                        "collectives into start/done")
+                elif not ok:
+                    findings.append(Finding(
+                        self.name, "EXPOSED_COLLECTIVE", "error",
+                        program.name,
+                        f"{len(rep['exposed'])}/{rep['pairs']} async "
+                        "collective pairs have no compute inside their "
+                        f"window: {rep['exposed']} — overlap_dap is not "
+                        "overlapping",
+                        detail=rep, detail_key={}))
+                else:
+                    stats["overlap"] = (f"{rep['overlapped']}/{rep['pairs']} "
+                                        "pairs overlapped")
+        return PassResult(self.name, program.name, findings, stats=stats)

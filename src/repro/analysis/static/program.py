@@ -1,0 +1,292 @@
+"""Program capture for the lint CLI: lower the REAL train/fold steps.
+
+Everything here traces abstractly (ShapeDtypeStruct params/batches, fake
+CPU devices) — capture costs seconds, no training happens.
+
+LINT_CFG_NOTES — why the lint config is not plain af2_tiny
+----------------------------------------------------------
+The materialization pass compares eqn-output element counts against the
+fused-impl bounds, so the bounds must sit strictly ABOVE every legitimate
+intermediate and the sequence extents must not collide with channel dims
+(the precision pass keys on "contracts over a sequence extent").  At
+af2_tiny sizes both properties fail (c_opm^2 == 4*c_z == 64; n_res ==
+c_z == 16), so lint runs af2_tiny with:
+
+  * n_res=24, n_seq=20, n_extra_seq=12 — distinct from every channel dim
+  * c_hidden_opm=16  -> OPM bound  r*r*c^2      = 147456
+  * c_hidden_mul=80  -> tri bound  r*r*2*c_mul  =  92160
+    (largest legit intermediate: the MSA transition (s, r, 4*c_m) = 61440
+    per-block under bf16... 20*24*128 = 61440 elems, still below both)
+  * opm/attention/tri chunks = 4 — every extent is chunked, so the
+    FULL_ATTENTION_SCORES detector is armed for r=24 and s=20
+  * structure n_head=3 — distinct from the evoformer head counts.  The IPA
+    scalar attention materializes its full (h, r, r) scores BY DESIGN (the
+    structure module is O(r^2) and AF2 never chunks it); the full-score
+    detector keys on evoformer head counts, so the structure head count
+    must not collide with them or every program would flag IPA.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.analysis.static.core import Program
+
+
+def lint_config(variant: str = "parallel"):
+    from repro.core.config import af2_tiny
+    base = af2_tiny(variant=variant)
+    tweak = dict(c_hidden_opm=16, c_hidden_mul=80, opm_chunk=4,
+                 attention_chunk=4, tri_mult_chunk=4)
+    return dataclasses.replace(
+        base,
+        evoformer=dataclasses.replace(base.evoformer, **tweak),
+        extra=dataclasses.replace(base.extra, **tweak),
+        structure=dataclasses.replace(base.structure, n_head=3),
+        n_res=24, n_seq=20, n_extra_seq=12)
+
+
+# ---------------------------------------------------------------------------
+# The plan matrix (ISSUE: serial, BP, DAP, hybrid, overlap_dap on/off)
+# ---------------------------------------------------------------------------
+
+def train_plan_matrix():
+    """[(name, ParallelPlan, per_sample_clip)] — every layout family the
+    repo supports.  The hybrid runs the per-sample-clip optimizer so the
+    scan-internal completion path (trainstep.py) is audited too."""
+    from repro.parallel.plan import ParallelPlan
+    return [
+        ("serial", ParallelPlan(data=2), None),
+        ("bp2", ParallelPlan(branch=2, variant="parallel"), None),
+        ("dap2", ParallelPlan(dap=2), None),                  # overlap auto-ON
+        ("dap2_sync", ParallelPlan(dap=2, overlap_dap=False), None),
+        ("hybrid", ParallelPlan(branch=2, dap=2, variant="parallel"), 0.1),
+    ]
+
+
+def fold_plan_matrix():
+    from repro.parallel.plan import ParallelPlan
+    return [
+        ("serial", ParallelPlan(), "float32"),
+        ("serial_bf16", ParallelPlan(), "bfloat16"),
+        ("dap2", ParallelPlan(dap=2, overlap_dap=True), "float32"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Train capture
+# ---------------------------------------------------------------------------
+
+def _abstract_state(cfg, optimizer):
+    import jax
+    from repro.core import model as af2
+    params = jax.eval_shape(
+        lambda: af2.init_params(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(optimizer.init, params)
+    return {"params": params, "opt": opt}
+
+
+def _abstract_batch(cfg, batch_size):
+    import jax
+    from repro.data.protein import protein_batch
+    return jax.eval_shape(lambda: protein_batch(0, 0, batch_size, cfg))
+
+
+def capture_train(name, plan, cfg, *, per_sample_clip=None, devices=None,
+                  with_hlo=False) -> Program:
+    import jax
+    import jax.numpy as jnp
+    from repro.train.optim import adamw
+    from repro.train.trainstep import make_af2_train_step
+
+    plan.validate(cfg)
+    cfg = plan.apply_to(cfg)
+    devices = devices if devices is not None \
+        else jax.devices()[:plan.n_devices]
+    optimizer = adamw(1e-3, per_sample_clip=per_sample_clip)
+    built = plan.build(devices, cfg=cfg)
+    train_step, built = make_af2_train_step(
+        cfg, optimizer, built, n_recycle=1, deterministic=False)
+
+    state = _abstract_state(cfg, optimizer)
+    batch = _abstract_batch(cfg, plan.pod * plan.data)
+    rng = jax.random.PRNGKey(0)
+    nr = jnp.int32(1)
+
+    step_jaxpr = jax.make_jaxpr(train_step)(state, batch, rng, nr)
+    fwd_jaxpr = _capture_fwd(cfg, built, state["params"], batch, rng)
+    baseline_jaxpr = (_capture_grad_nocomplete(
+        cfg, built, state["params"], batch, rng)
+        if built.sync_axes else None)
+
+    hlo_text = None
+    if with_hlo:
+        lowered = jax.jit(train_step, donate_argnums=(0,)).lower(
+            state, batch, rng, nr)
+        hlo_text = lowered.compile().as_text()
+
+    jaxprs = {"step": step_jaxpr, "fwd": fwd_jaxpr}
+    if baseline_jaxpr is not None:
+        jaxprs["grad_nocomplete"] = baseline_jaxpr
+    return Program(
+        name=f"train:{name}", kind="train", jaxprs=jaxprs, hlo_text=hlo_text,
+        meta={"cfg": cfg, "plan": plan.describe(),
+              "sync_axes": built.sync_axes, "dp_axes": built.dp_axes,
+              "donate_argnums": (0,) if with_hlo else (),
+              "backend": jax.default_backend(),
+              "static_n_recycle": False, "stochastic_recycling": True,
+              "expect_overlap": plan.resolve_overlap(cfg)})
+
+
+def _capture_fwd(cfg, built, params_shapes, batch_shapes, rng):
+    """Forward-only loss inside the plan's shard_map (the block collectives
+    need the mesh axes in scope)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import model as af2
+    from repro.parallel.mesh_utils import smap
+
+    batch_spec = built.batch_spec
+
+    def body(params, batch, rng):
+        n_local = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        rngs = jax.random.split(rng, n_local)
+
+        def one(c, sample_rng):
+            sample, r = sample_rng
+            l, _ = af2.loss_fn(params, cfg, sample, n_recycle=1,
+                               block_fn=built.block_fn,
+                               stack_io=built.stack_io, rng=r,
+                               deterministic=False)
+            return c + l, None
+        total, _ = jax.lax.scan(one, jnp.zeros((), jnp.float32),
+                                (batch, rngs))
+        return total / n_local
+
+    batch_specs = jax.tree_util.tree_map(lambda _: batch_spec, batch_shapes)
+    fn = smap(body, built.mesh, in_specs=(P(), batch_specs, P()),
+              out_specs=P())
+    return jax.make_jaxpr(fn)(params_shapes, batch_shapes, rng)
+
+
+def _capture_grad_nocomplete(cfg, built, params_shapes, batch_shapes, rng):
+    """The PR-2 bug, reconstructed on purpose: shard_map'd gradient with DP
+    pmean but WITHOUT complete_partial_grads over the branch/dap sync axes.
+    The collectives audit requires the real step to carry strictly more
+    psums per sync axis than this null hypothesis (psum transposes to psum,
+    so the bwd pass alone cannot tell the two apart)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import model as af2
+    from repro.parallel.mesh_utils import smap
+
+    batch_spec = built.batch_spec
+
+    def body(params, batch, rng):
+        n_local = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        rngs = jax.random.split(rng, n_local)
+
+        def local_loss(p):
+            def one(c, sample_rng):
+                sample, r = sample_rng
+                l, _ = af2.loss_fn(p, cfg, sample, n_recycle=1,
+                                   block_fn=built.block_fn,
+                                   stack_io=built.stack_io, rng=r,
+                                   deterministic=False)
+                return c + l, None
+            total, _ = jax.lax.scan(one, jnp.zeros((), jnp.float32),
+                                    (batch, rngs))
+            return total / n_local
+
+        loss, grads = jax.value_and_grad(local_loss)(params)
+        # BUG (deliberate): no complete_partial_grads(grads, sync_axes)
+        if built.dp_axes:
+            grads = jax.lax.pmean(grads, built.dp_axes)
+        return loss, grads
+
+    batch_specs = jax.tree_util.tree_map(lambda _: batch_spec, batch_shapes)
+    params_specs = jax.tree_util.tree_map(lambda _: P(), params_shapes)
+    fn = smap(body, built.mesh, in_specs=(P(), batch_specs, P()),
+              out_specs=(P(), params_specs))
+    return jax.make_jaxpr(fn)(params_shapes, batch_shapes, rng)
+
+
+# ---------------------------------------------------------------------------
+# Fold capture
+# ---------------------------------------------------------------------------
+
+def capture_fold(name, plan, cfg, *, dtype="float32", devices=None,
+                 with_hlo=False) -> Program:
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import fold_steps as fs
+
+    inf = plan.for_inference()
+    devices = devices if devices is not None \
+        else jax.devices()[:inf.n_devices]
+    bucket = fs.Bucket(cfg.n_res, cfg.n_seq, cfg.n_extra_seq)
+    bcfg = inf.apply_to(fs.bucket_cfg(cfg, bucket))
+    inf.validate(bcfg)
+    built = inf.build(devices, cfg=bcfg)
+    jdt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    step = fs.make_fold_step(bcfg, built, max_recycle=1, tol=0.0, dtype=jdt)
+
+    from repro.core import model as af2
+    params = jax.eval_shape(
+        lambda: af2.init_params(jax.random.PRNGKey(0), bcfg))
+    smp = fs.pad_to_bucket({
+        "msa_feat": np.zeros((bcfg.n_seq, bcfg.n_res, bcfg.msa_feat_dim),
+                             np.float32),
+        "extra_msa_feat": np.zeros(
+            (bcfg.n_extra_seq, bcfg.n_res, bcfg.msa_feat_dim), np.float32),
+        "target_feat": np.zeros((bcfg.n_res, bcfg.target_feat_dim),
+                                np.float32),
+        "residue_index": np.arange(bcfg.n_res, dtype=np.int32),
+    }, bucket)
+    # batch slots: >= n_devices, but never equal to a head count — the
+    # recycling distance matrix is a batched (B, r, r) dot and a B that
+    # collides with n_head would read as full attention scores (LINT_CFG
+    # philosophy: disambiguate by construction)
+    heads = {cfg.evoformer.n_head_msa, cfg.evoformer.n_head_pair,
+             cfg.extra.n_head_msa, cfg.extra.n_head_pair}
+    bsz = max(1, len(devices))
+    while bsz in heads:
+        bsz += 1
+    batch = fs.stack_padded([smp], bsz)
+
+    step_jaxpr = jax.make_jaxpr(step)(params, batch)
+    hlo_text = None
+    if with_hlo:
+        hlo_text = step.lower(params, batch).compile().as_text()
+    return Program(
+        name=f"fold:{name}", kind="fold",
+        jaxprs={"step": step_jaxpr, "fwd": step_jaxpr},
+        hlo_text=hlo_text,
+        meta={"cfg": bcfg, "plan": inf.describe(),
+              "sync_axes": built.sync_axes, "dp_axes": built.dp_axes,
+              "donate_argnums": (),
+              "backend": jax.default_backend(),
+              "expect_overlap": inf.resolve_overlap(bcfg)})
+
+
+def capture_all(*, with_hlo=False, only=None) -> list:
+    """The full program matrix.  ``only`` filters by substring match on the
+    program name (e.g. 'dap2', 'fold:')."""
+    cfg = lint_config()
+    out = []
+    for name, plan, clip in train_plan_matrix():
+        full = f"train:{name}"
+        if only and only not in full:
+            continue
+        out.append(capture_train(name, plan, cfg, per_sample_clip=clip,
+                                 with_hlo=with_hlo))
+    for name, plan, dtype in fold_plan_matrix():
+        full = f"fold:{name}"
+        if only and only not in full:
+            continue
+        out.append(capture_fold(name, plan, cfg, dtype=dtype,
+                                with_hlo=with_hlo))
+    return out

@@ -186,7 +186,8 @@ def global_attention(p: Params, x: jnp.ndarray, *, n_head: int,
     if key_mask is not None:
         logits = logits + mask_bias(key_mask)
     w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
-    o = jnp.einsum("...hs,...sc->...hc", w, v)                      # (..., h, c_h)
+    o = jnp.einsum("...hs,...sc->...hc", w, v,
+                   preferred_element_type=jnp.float32).astype(v.dtype)
     g = jax.nn.sigmoid(nn.dense(p["gate"], h))                      # (..., S, h*c)
     o = g * o.reshape(*lead, 1, n_head * c_hidden)
     return nn.dense(p["out"], o.astype(x.dtype))
@@ -267,10 +268,16 @@ def opm_contract(a: jnp.ndarray, b: jnp.ndarray, w: jnp.ndarray,
     chunks = jnp.moveaxis(a_p.reshape(s, (r_i + pad) // rc, rc, c), 1, 0)
 
     def one_chunk(a_c):                                       # (s, rc, c)
-        outer = jnp.einsum("sic,sjd->ijcd", a_c, b) / denom
+        # fp32 accumulation over s (AMP policy: bf16 sums over thousands of
+        # MSA rows lose mantissa exactly where the signal is a mean)
+        outer = jnp.einsum("sic,sjd->ijcd", a_c, b,
+                           preferred_element_type=jnp.float32) / denom
         return jnp.einsum("ijcd,cdz->ijz", outer.astype(out_dtype), wr)
 
-    out = jax.lax.map(one_chunk, chunks)                      # (n, rc, r_j, z)
+    # checkpoint: without it AD saves each chunk's (rc, r_j, c, d) outer
+    # tensor as a stacked residual for the w-gradient — the full (r, r, c*d)
+    # this impl exists to avoid, just split across the ys of the scan
+    out = jax.lax.map(jax.checkpoint(one_chunk), chunks)      # (n, rc, r_j, z)
     out = out.reshape(-1, b.shape[1], wr.shape[-1])[:r_i]
     return out + b_out
 

@@ -109,8 +109,12 @@ def invariant_point_attention(p: Params, cfg: StructureConfig, s, z, rots,
         logits = logits + mask_bias(res_mask)[None, None]
     att = jax.nn.softmax(logits, axis=-1)                            # (h, i, j)
 
-    o_scalar = jnp.einsum("hij,jhc->ihc", att.astype(v.dtype), v).reshape(r, -1)
-    o_pair = jnp.einsum("hij,ijc->ihc", att.astype(z.dtype), z).reshape(r, -1)
+    o_scalar = jnp.einsum("hij,jhc->ihc", att.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32)
+    o_pair = jnp.einsum("hij,ijc->ihc", att.astype(z.dtype), z,
+                        preferred_element_type=jnp.float32)
+    o_scalar = o_scalar.astype(v.dtype).reshape(r, -1)
+    o_pair = o_pair.astype(z.dtype).reshape(r, -1)
     o_pts_g = jnp.einsum("hij,jhpc->ihpc", att.astype(jnp.float32),
                          v_pts_g.astype(jnp.float32))                # (i, h, P, 3)
     o_pts = rigid_invert_apply(rots[:, None, None], trans[:, None, None], o_pts_g)

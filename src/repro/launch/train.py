@@ -141,6 +141,12 @@ def main():
                     help="AF2: lower the train step once, check async-"
                          "collective overlap in the optimized HLO, record "
                          "the verdict as the train/async_overlap_ok metric")
+    ap.add_argument("--lint", action="store_true",
+                    help="AF2: run the static-analyzer pass suite (DESIGN.md "
+                         "§15) over THIS launch's ParallelPlan before "
+                         "training (on the calibrated lint probe config), "
+                         "record lint/* metrics, and refuse to train if any "
+                         "finding is unwaived in LINT_BASELINE.json")
     args = ap.parse_args()
 
     if args.print_tpu_env:
@@ -216,6 +222,42 @@ def run_af2(args, jax, jnp, np):
         logdir = (f"{args.trace_out}.profile" if args.trace_out
                   else "jax_profile")
         profile_window = ProfileWindow(lo, hi, logdir)
+
+    # -- pre-flight static analysis (DESIGN.md §15) -------------------------
+    # Lints the LAUNCH plan, not the fixed CI matrix: the probe config is
+    # the calibrated lint_config (launch configs like af2_tiny have channel
+    # dims that collide with sequence extents — LINT_CFG_NOTES), the plan is
+    # this run's.  A matrix waiver keyed on e.g. "train:dap2" does not carry
+    # over to "train:launch" — launch-plan findings need their own entry.
+    if args.lint:
+        from repro.analysis.lint import DEFAULT_BASELINE, load_baseline
+        from repro.analysis.static import all_passes
+        from repro.analysis.static.program import capture_train, lint_config
+        waivers = dict(load_baseline(DEFAULT_BASELINE).get("waivers", {}))
+        prog = capture_train("launch", plan, lint_config(args.variant),
+                             per_sample_clip=0.1)
+        results = [p.run(prog) for p in all_passes()]
+        findings = [f for r in results for f in r.findings]
+        unwaived = [f for f in findings if f.fingerprint not in waivers]
+        obs.record("lint/pass_runs", len(results), step=0)
+        obs.record("lint/skipped",
+                   sum(1 for r in results if r.skipped), step=0)
+        obs.record("lint/findings", len(findings), step=0)
+        obs.record("lint/unwaived", len(unwaived), step=0)
+        obs.record("lint/ok", int(not unwaived), step=0)
+        print(f"lint: {plan.describe()}: {len(findings)} findings "
+              f"({len(unwaived)} unwaived) across {len(results)} passes"
+              + "".join(f" [{r.pass_name}: skipped — {r.skip_reason}]"
+                        for r in results if r.skipped))
+        for f in unwaived:
+            print(f"  UNWAIVED [{f.severity}] {f.fingerprint} "
+                  f"{f.pass_name}/{f.code}: {f.message}")
+        if unwaived:
+            obs.flush()
+            raise SystemExit(
+                "lint: FAIL — this plan's step violates a pinned invariant; "
+                "fix it or waive the fingerprint (with a reason) in "
+                "LINT_BASELINE.json before training")
 
     # paper §5.2 / AF2 suppl. 1.11.3: clip each SAMPLE's gradient at 0.1
     opt = adamw(af2_lr_schedule(args.lr, warmup_steps=100),

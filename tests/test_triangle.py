@@ -163,6 +163,9 @@ def test_reference_contraction_accumulates_fp32_under_bf16():
     fp32 accumulation (a bf16 sum over r >= 128 terms has ulp ~1 at
     magnitude ~r) or the reference is no oracle.  Pinned structurally: the
     jaxpr's k-contraction dot_general must emit fp32."""
+    from repro.analysis.static.jaxpr_walk import iter_eqns
+    from repro.analysis.static.passes.precision import (
+        contraction_extents, find_low_precision_contractions)
     r, c_z, c = 128, 16, 16
     p, z = _setup(r, c_z, c)
     p16 = nn.BF16.cast(p)
@@ -170,19 +173,14 @@ def test_reference_contraction_accumulates_fp32_under_bf16():
     for outgoing in (True, False):
         jaxpr = jax.make_jaxpr(lambda p, z: evo.triangle_mult(
             p, z, outgoing=outgoing))(p16, z16)
-        contractions = []
-        for eqn in jaxpr.jaxpr.eqns:
-            if eqn.primitive.name != "dot_general":
-                continue
-            (lhs_c, _), _ = eqn.params["dimension_numbers"]
-            lhs_shape = eqn.invars[0].aval.shape
-            if any(lhs_shape[d] == r for d in lhs_c):
-                contractions.append(eqn)
-        assert contractions, "detector: no r-contraction dot_general found"
-        for eqn in contractions:
-            assert eqn.outvars[0].aval.dtype == jnp.float32, (
-                f"k-contraction accumulates in {eqn.outvars[0].aval.dtype}, "
-                "not fp32 (outgoing={outgoing})")
+        assert any(e.primitive.name == "dot_general"
+                   and r in contraction_extents(e)
+                   for e, _ in iter_eqns(jaxpr)), (
+            "detector: no r-contraction dot_general found")
+        hits = find_low_precision_contractions(jaxpr, extents={r})
+        assert not hits, (
+            f"k-contraction accumulates in bf16, not fp32 "
+            f"(outgoing={outgoing}): {hits}")
     # and the bf16 output stays close to the fp32 oracle
     ref32 = evo.triangle_mult(p, z, outgoing=True)
     out16 = evo.triangle_mult(p16, z16, outgoing=True)

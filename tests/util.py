@@ -39,53 +39,26 @@ def _repo_root():
     return str(pathlib.Path(__file__).resolve().parents[1])
 
 
+# The jaxpr-walking helpers delegate to the static analyzer's shared
+# traversal (src/repro/analysis/static/jaxpr_walk.py) so tests and the lint
+# CLI agree on what "an intermediate" is.
+
 def iter_eqn_avals(closed_jaxpr):
     """All output avals of all eqns, recursing into sub-jaxprs (scan/map
     bodies) — shared by the peak-intermediate memory assertions."""
-    from jax import core
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            for var in eqn.outvars:
-                yield var.aval
-            for val in eqn.params.values():
-                items = val if isinstance(val, (tuple, list)) else (val,)
-                for it in items:
-                    if isinstance(it, core.ClosedJaxpr):
-                        yield from walk(it.jaxpr)
-                    elif isinstance(it, core.Jaxpr):
-                        yield from walk(it)
-
-    yield from walk(closed_jaxpr.jaxpr)
+    from repro.analysis.static.jaxpr_walk import iter_out_avals
+    for aval, _eqn, _path in iter_out_avals(closed_jaxpr):
+        yield aval
 
 
 def count_prims(closed_jaxpr, names):
     """Occurrences of each primitive name, recursing into sub-jaxprs
     (scan/cond/shard_map bodies) — used to pin collective counts."""
-    from collections import Counter
-
-    from jax import core
-
-    counts = Counter({n: 0 for n in names})
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name in names:
-                counts[eqn.primitive.name] += 1
-            for val in eqn.params.values():
-                items = val if isinstance(val, (tuple, list)) else (val,)
-                for it in items:
-                    if isinstance(it, core.ClosedJaxpr):
-                        walk(it.jaxpr)
-                    elif isinstance(it, core.Jaxpr):
-                        walk(it)
-
-    walk(closed_jaxpr.jaxpr)
-    return dict(counts)
+    from repro.analysis.static.jaxpr_walk import count_primitives
+    return count_primitives(closed_jaxpr, names)
 
 
 def max_eqn_elems(closed_jaxpr) -> int:
     """Largest eqn-output aval, in elements."""
-    import numpy as np
-    return max(int(np.prod(a.shape)) for a in iter_eqn_avals(closed_jaxpr)
-               if getattr(a, "shape", None))
+    from repro.analysis.static.jaxpr_walk import peak_eqn_elems
+    return peak_eqn_elems(closed_jaxpr)
